@@ -1,0 +1,66 @@
+"""Shared benchmark helpers: timing, CSV rows, a pre-trained tiny model."""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time in µs (blocks on jax results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+@lru_cache(maxsize=1)
+def trained_tiny():
+    """Tiny math model trained ~100 steps (shared across benchmarks)."""
+    from repro.configs.base import ModelConfig
+    from repro.data.dataset import MathDataLoader
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.models import api
+    from repro.train.loop import train_loop
+    from repro.train.optimizer import AdamWConfig
+
+    tok = ByteTokenizer()
+    cfg = ModelConfig(name="bench-tiny", n_layers=3, d_model=96, n_heads=6,
+                      n_kv_heads=2, d_ff=256, vocab_size=tok.vocab_size,
+                      dtype="float32", param_dtype="float32", remat="none")
+    m = api.get_model(cfg)
+    p = m.init_params(jax.random.key(0), cfg)
+    loader = MathDataLoader(tok, batch_size=32, seq_len=64, seed=11,
+                            max_terms=2, reasoning=False)
+    oc = AdamWConfig(lr=2e-3, warmup_steps=20, total_steps=240)
+    p, _ = train_loop(p, cfg, oc, iter(loader), n_steps=240, log_every=0,
+                      log_fn=lambda *_: None)
+    loader.close()
+    return tok, cfg, p
+
+
+def eval_ppl(params, cfg, tok, n_tasks: int = 64, seed: int = 99) -> float:
+    """Masked-CE perplexity on held-out math tasks."""
+    from repro.data.dataset import pack_documents
+    from repro.data.tasks import gen_dataset
+    from repro.train.loop import lm_loss
+
+    tasks = gen_dataset(seed, n_tasks, reasoning=False, max_terms=2)
+    t, y, m = pack_documents([(tk.prompt, tk.target) for tk in tasks], tok, 64)
+    loss, _ = lm_loss(params, (jnp.asarray(t), jnp.asarray(y),
+                               jnp.asarray(m)), cfg, None)
+    return float(jnp.exp(loss))

@@ -1,0 +1,50 @@
+"""Benchmark harness: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run --only fig14,fig15
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: quant,kernels,serving,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    sections = []
+    if only is None or {"quant", "tbl1", "tbl4"} & only:
+        from benchmarks import quant_accuracy
+        sections.append(("quant_accuracy", quant_accuracy.run))
+    if only is None or {"kernels", "fig14", "fig15", "tbl2", "tbl5"} & only:
+        from benchmarks import kernel_ablation
+        sections.append(("kernel_ablation", kernel_ablation.run))
+    if only is None or {"serving", "fig8", "fig10", "fig11", "fig17"} & only:
+        from benchmarks import serving_scaling
+        sections.append(("serving_scaling", serving_scaling.run))
+    if only is None or "roofline" in only:
+        from benchmarks import roofline
+        sections.append(("roofline", roofline.run))
+
+    failed = []
+    for name, fn in sections:
+        try:
+            fn()
+        except Exception:  # noqa
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED sections: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

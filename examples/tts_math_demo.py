@@ -1,0 +1,77 @@
+"""END-TO-END DRIVER (deliverable b): train a small LM on verifiable math,
+then demonstrate the paper's headline claim — accuracy scales with the
+parallel test-time budget, so a small model + TTS beats greedy decoding —
+using the full stack: data pipeline -> AdamW training -> checkpoint ->
+quantized serving -> Best-of-N / self-consistency / beam search.
+
+    PYTHONPATH=src python examples/tts_math_demo.py [--steps 300] [--tasks 20]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.core import reward as R
+from repro.core.controller import TTSSpec, sweep
+from repro.data import tasks as T
+from repro.data.dataset import MathDataLoader
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import api
+from repro.quant.qlinear import quantize_model_params
+from repro.serving.engine import DecodeEngine
+from repro.train.loop import train_loop
+from repro.train.optimizer import AdamWConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--tasks", type=int, default=16)
+ap.add_argument("--ckpt-dir", default="runs/tts_demo_ckpt")
+args = ap.parse_args()
+
+tok = ByteTokenizer()
+cfg = ModelConfig(name="tts-demo", n_layers=3, d_model=96, n_heads=6,
+                  n_kv_heads=2, d_ff=256, vocab_size=tok.vocab_size,
+                  dtype="float32", param_dtype="float32", remat="none")
+model = api.get_model(cfg)
+
+# --- 1. train (few hundred steps, ~100k params-scale model) ---------------
+print(f"[1/4] training {cfg.name} for {args.steps} steps ...")
+params = model.init_params(jax.random.key(0), cfg)
+loader = MathDataLoader(tok, batch_size=32, seq_len=64, seed=0,
+                        max_terms=2, reasoning=False)
+oc = AdamWConfig(lr=2e-3, warmup_steps=20, total_steps=args.steps)
+t0 = time.time()
+params, _ = train_loop(params, cfg, oc, iter(loader), n_steps=args.steps,
+                       log_every=max(args.steps // 5, 1))
+loader.close()
+print(f"    trained in {time.time()-t0:.0f}s")
+
+# --- 2. checkpoint + restore (fault-tolerance path) ------------------------
+ck = Checkpointer(args.ckpt_dir)
+ck.save(params, step=args.steps)
+params, _ = ck.restore(jax.eval_shape(lambda: params))
+print(f"[2/4] checkpoint round-trip at {args.ckpt_dir}")
+
+# --- 3. quantize for deployment (paper §5.1: tile Q4_0 + Q8_0 down) --------
+qparams = quantize_model_params(params, scheme="tile")
+print("[3/4] weights quantized (tile-group Q4_0, Q8_0 down-proj)")
+
+# --- 4. test-time scaling sweep (paper Figs. 5/10) --------------------------
+engine = DecodeEngine(qparams, cfg, max_len=96, eos_id=tok.eos_id,
+                      pad_id=tok.pad_id)
+tasks = T.gen_dataset(1234, args.tasks, reasoning=False, max_terms=2)
+specs = [TTSSpec("best_of_n", n, max_tokens=10) for n in (1, 2, 4, 8, 16)]
+specs += [TTSSpec("self_consistency", n, max_tokens=10) for n in (4, 16)]
+print(f"[4/4] TTS sweep over {args.tasks} held-out tasks:")
+rows = sweep(engine, tok, tasks, specs, jax.random.key(7), R.OracleVerifier())
+print(f"{'method':<18}{'budget':>7}{'accuracy':>10}{'decode_tokens':>15}")
+for r in rows:
+    print(f"{r['method']:<18}{r['budget']:>7}{r['accuracy']:>10.3f}"
+          f"{r['decode_tokens']:>15}")
+base = rows[0]["accuracy"]
+best = max(r["accuracy"] for r in rows)
+print(f"\nParallel TTS lifted accuracy {base:.3f} -> {best:.3f} "
+      "on the same (quantized) model — the paper's Fig. 5/10 claim.")

@@ -1,0 +1,298 @@
+"""Per-(arch × shape) input specs and step builders for the dry-run.
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStruct
+stand-ins for every model input (no device allocation).  ``build_cell``
+returns the jit-able step function + abstract args + shardings for one
+dry-run cell:
+
+  train_*   -> full train_step (fwd + bwd + AdamW update)
+  prefill_* -> prefill (prompt forward + KV-cache build)
+  decode_* / long_* -> serve_step (one decode step + distributed sampling)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.configs.registry import get_config
+from repro.distributed.sharding import ParallelContext, param_specs
+from repro.models import api
+from repro.serving.sampler import SamplerConfig, distributed_sample
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _maybe_axis(par: ParallelContext, axis, dim: int):
+    """Shard ``dim`` over ``axis`` only when it divides (GSPMD would pad;
+    shard_map would reject)."""
+    if par.mesh is None or axis is None:
+        return None
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    axes = tuple(a for a in axes if a in par.axes)
+    if not axes:
+        return None
+    import math
+    size = math.prod(par.mesh.shape[a] for a in axes)
+    return (axes if len(axes) > 1 else axes[0]) if dim % size == 0 else None
+
+
+# Per-arch gradient-accumulation factors for the train_4k dry-run: cells
+# whose single-shot activation working set exceeds v5e HBM split the
+# global batch into sequential microbatches (the standard memory/compute
+# trade; semantics tested in test_microbatch_close_to_full_batch).
+TRAIN_MICROBATCHES = {
+    "command-r-35b": 8,
+    "internvl2-1b": 1,  # microbatch scan regressed temp — see §Dry-run fit note
+    "mamba2-130m": 1,   # microbatch scan regressed temp — see §Dry-run fit note
+    "mixtral-8x7b": 4,
+    "olmoe-1b-7b": 4,
+    "qwen2.5-14b": 2,
+    "whisper-base": 1,  # microbatch scan regressed temp — see §Dry-run fit note
+}
+
+
+def _ns(par, *spec_parts):
+    if par.mesh is None:
+        return None
+    return NamedSharding(par.mesh, P(*spec_parts))
+
+
+# ---------------------------------------------------------------------------
+# Input specs (the model-input stand-ins)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, par: ParallelContext,
+                *, n_patches: int = 256) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    baxes = ("pod", "data") if par.tp else ("pod", "data", "model")
+    batch_ax = _maybe_axis(par, baxes, B)
+    tok_sh = _ns(par, batch_ax, None)
+    vec_sh = _ns(par, batch_ax)
+    emb_sh = _ns(par, batch_ax, None, None)
+    dtype = jnp.dtype(cfg.dtype)
+
+    if shape.kind == "train":
+        specs = {
+            "tokens": _sds((B, S), jnp.int32, tok_sh),
+            "targets": _sds((B, S), jnp.int32, tok_sh),
+            "mask": _sds((B, S), jnp.float32, tok_sh),
+        }
+        if cfg.frontend == "patch_stub":
+            specs["embeddings"] = _sds((B, n_patches, cfg.d_model), dtype, emb_sh)
+        if cfg.family == "encdec":
+            specs["embeddings"] = _sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                       dtype, emb_sh)
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {
+            "tokens": _sds((B, S), jnp.int32, tok_sh),
+            "lengths": _sds((B,), jnp.int32, vec_sh),
+        }
+        if cfg.frontend == "patch_stub":
+            specs["embeddings"] = _sds((B, n_patches, cfg.d_model), dtype, emb_sh)
+        if cfg.family == "encdec":
+            specs["embeddings"] = _sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                       dtype, emb_sh)
+        return specs
+
+    # decode: one new token against a cache of S
+    return {
+        "tokens": _sds((B, 1), jnp.int32, tok_sh),
+        "cache_len": _sds((B,), jnp.int32, vec_sh),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding specs
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, par: ParallelContext, abstract_cache: dict,
+                batch: int):
+    """PartitionSpec pytree for a decode cache."""
+    seq_ax_name = par.kv_seq_axis
+    batch_ax = _maybe_axis(par, ("pod", "data"), batch)
+    if seq_ax_name is not None and batch_ax is not None:
+        bt = (batch_ax,) if isinstance(batch_ax, str) else tuple(batch_ax)
+        bt = tuple(a for a in bt if a != seq_ax_name)
+        batch_ax = bt if len(bt) > 1 else (bt[0] if bt else None)
+
+    def one(path, leaf):
+        key = str(getattr(path[-1], "key", path[-1]))
+        if key in ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v"):
+            # (L, B, S, Hkv, D) — flash-decoding shards seq over kv_seq_axis
+            if seq_ax_name is not None:
+                seq_ax = _maybe_axis(par, seq_ax_name, leaf.shape[2])
+                return P(None, batch_ax, seq_ax, None, None)
+            heads_ax = _maybe_axis(par, "model", leaf.shape[3])
+            # GQA head counts (8, 1) rarely divide the 16-way model axis:
+            # fall back to sharding head_dim (contraction splits into
+            # partials GSPMD psums — tiny at decode batch sizes).
+            hd_ax = (None if heads_ax is not None
+                     else _maybe_axis(par, "model", leaf.shape[4]))
+            return P(None, batch_ax, None, heads_ax, hd_ax)
+        if key == "conv":      # (L, B, W-1, conv_dim)
+            return P(None, batch_ax, None, _maybe_axis(par, "model", leaf.shape[3]))
+        if key == "ssm":       # (L, B, H, P, N)
+            return P(None, batch_ax, _maybe_axis(par, "model", leaf.shape[2]),
+                     None, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+
+# ---------------------------------------------------------------------------
+# Cell builders
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: object                 # function to jit
+    args: tuple                # abstract args (SDS pytrees)
+    in_shardings: tuple
+    out_shardings: object      # None => let GSPMD choose
+    static: dict
+
+
+def _to_shardings(par, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(par.mesh, s) if par.mesh is not None else None,
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape: InputShape, par: ParallelContext,
+               *, smoke: bool = False, quantized: bool = False,
+               microbatches: int = 0) -> Cell:
+    """``quantized``: serve cells lower with tile-Q4_0 weight leaves
+    (Q8_0 down-proj) — the paper's §5.1 deployment — so the dry-run's
+    cost/memory analysis sees real int4/int8 byte traffic."""
+    cfg = get_config(arch, smoke=smoke)
+    cache_len_cap = shape.seq_len
+    if shape.kind == "decode" and cfg.family != "encdec":
+        # flash-decoding: KV seq over "model" for batched decode (batch
+        # occupies the data axis); over "data" for batch-1 long context.
+        # (whisper's decoder keeps the head/head_dim sharding path.)
+        axis = "data" if shape.name == "long_500k" else "model"
+        cfg = cfg.with_(kv_partition="sequence")
+        par = dataclasses.replace(par, kv_seq_axis=axis)
+        # uniformly-windowed archs (mixtral SWA) use a ring cache of
+        # window_size slots — 128× less KV memory at 500k context.
+        if (cfg.window_size and not cfg.attn_pattern.startswith("local_global")
+                and cfg.window_size < shape.seq_len):
+            cfg = cfg.with_(ring_cache=True)
+            cache_len_cap = cfg.window_size
+    if shape.kind != "train":
+        # serving: weights replicated over data (no per-layer all-gathers
+        # on the decode critical path); TP over model only.
+        par = dataclasses.replace(par, fsdp=False)
+    else:
+        # training: sequence-shard the remat-saved residual stream over the
+        # model axis (Megatron SP) — divides activation memory by TP degree.
+        par = dataclasses.replace(par, shard_activations_seq=True)
+    model = api.get_model(cfg)
+    aparams = model.abstract_params(cfg)
+    if shape.kind != "train":
+        # serving streams weights at bf16 (the paper's fp16-weights analog);
+        # the f32 master copies exist only in training.
+        aparams = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(
+                a.shape, jnp.bfloat16 if a.dtype == jnp.float32 else a.dtype),
+            aparams)
+        if quantized:
+            from repro.quant.qlinear import quantize_model_params
+
+            aparams = jax.eval_shape(
+                lambda p: quantize_model_params(p), aparams)
+    pspecs = param_specs(aparams, par,
+                         stacked_prefixes=("layers", "enc_layers", "dec_layers"))
+    pshard = _to_shardings(par, pspecs)
+    aparams = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        aparams, pshard)
+    specs = input_specs(cfg, shape, par)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        from repro.train.loop import make_train_step
+
+        oc = AdamWConfig()
+        mb = microbatches or TRAIN_MICROBATCHES.get(arch, 1)
+        step = make_train_step(cfg, oc, par, microbatches=mb)
+        aopt = jax.eval_shape(init_opt_state, aparams)
+        scalar_sh = (NamedSharding(par.mesh, P())
+                     if par.mesh is not None else None)
+        opt_sh = {"m": pshard, "v": pshard, "step": scalar_sh}
+        if par.mesh is not None:
+            aopt = {
+                "m": jax.tree.map(lambda a, s: jax.ShapeDtypeStruct(
+                    a.shape, a.dtype, sharding=s), aopt["m"], pshard),
+                "v": jax.tree.map(lambda a, s: jax.ShapeDtypeStruct(
+                    a.shape, a.dtype, sharding=s), aopt["v"], pshard),
+                "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=scalar_sh),
+            }
+        batch_keys = ["tokens", "targets", "mask"]
+        if "embeddings" in specs:
+            batch_keys.append("embeddings")
+        batch = tuple(specs[k] for k in batch_keys)
+
+        def train_fn(params, opt_state, *batch):
+            return step(params, opt_state, batch)
+
+        in_sh = (pshard, opt_sh, *[b.sharding for b in batch])
+        return Cell(name=f"{arch}:{shape.name}", fn=train_fn,
+                    args=(aparams, aopt, *batch), in_shardings=in_sh,
+                    out_shardings=None, static={"donate": (0, 1)})
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, tokens, lengths, embeddings=None):
+            kw = {"embeddings": embeddings} if embeddings is not None else {}
+            return model.prefill(params, tokens, cfg, par, max_len=S,
+                                 lengths=lengths, **kw)
+
+        args = [aparams, specs["tokens"], specs["lengths"]]
+        in_sh = [pshard, specs["tokens"].sharding, specs["lengths"].sharding]
+        if "embeddings" in specs:
+            args.append(specs["embeddings"])
+            in_sh.append(specs["embeddings"].sharding)
+        return Cell(name=f"{arch}:{shape.name}", fn=prefill_fn,
+                    args=tuple(args), in_shardings=tuple(in_sh),
+                    out_shardings=None, static={})
+
+    # decode / long-context decode: serve_step = decode + sample
+    t_enc = cfg.encoder_seq_len if cfg.family == "encdec" else 0
+    acache = (model.abstract_cache(cfg, B, S, t_enc=t_enc)
+              if cfg.family == "encdec"
+              else model.abstract_cache(cfg, B, cache_len_cap))
+    cspecs = cache_specs(cfg, par, acache, B)
+    cshard = _to_shardings(par, cspecs)
+    acache = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        acache, cshard)
+    sc = SamplerConfig(temperature=0.8)
+
+    def serve_fn(params, cache, tokens, cache_len, rng):
+        logits, new_cache = model.decode_step(params, tokens, cache,
+                                              cache_len, cfg, par)
+        tok = distributed_sample(logits.astype(jnp.float32), rng, sc, par)
+        return tok, new_cache
+
+    key = jax.random.key(0)  # concrete (tiny) — lower() accepts mixed
+    return Cell(
+        name=f"{arch}:{shape.name}", fn=serve_fn,
+        args=(aparams, acache, specs["tokens"], specs["cache_len"], key),
+        in_shardings=(pshard, cshard, specs["tokens"].sharding,
+                      specs["cache_len"].sharding, None),
+        out_shardings=None, static={"donate": (1,)})

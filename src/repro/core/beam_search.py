@@ -1,0 +1,76 @@
+"""Step-level beam search with a process reward model (paper §2.1, Fig. 1
+right; Snell et al. 2024).
+
+Beams decode in one batch (width × expansion) — like Best-of-N this rides
+the idle matrix-unit rows.  After every reasoning *step* (delimiter '.'),
+each beam's prefix is scored by the PRM; the top ``width`` of
+``width × expand`` candidates survive (``engine.reorder`` gathers their KV
+cache rows) and are re-expanded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.best_of_n import TTSResult
+from repro.data import tasks as T
+from repro.data.tokenizer import ByteTokenizer
+from repro.serving.engine import DecodeEngine
+from repro.serving.sampler import SamplerConfig
+
+
+def beam_search(engine: DecodeEngine, tok: ByteTokenizer, task: T.MathTask,
+                *, width: int, expand: int, max_steps: int = 8,
+                step_tokens: int = 16, rng, prm,
+                sc: SamplerConfig = SamplerConfig(temperature=0.8),
+                prompt_len: int = 64) -> TTSResult:
+    """width = surviving beams; expand = candidates per beam per step."""
+    dot_id = tok.encode(".", bos=False)[0]
+    ids, lens = tok.encode_batch([task.prompt], prompt_len)
+    state = engine.prefill(jnp.asarray(ids), jnp.asarray(lens))
+    state = engine.fork(state, width)
+    texts = [""] * width
+    total_tokens = 0
+
+    for step in range(max_steps):
+        # expand each beam
+        state = engine.fork(state, expand)
+        texts = [t for t in texts for _ in range(expand)]
+        state = engine.resume(state)
+        rng, k = jax.random.split(rng)
+        state, out = engine.generate(state, step_tokens, k, sc,
+                                     stop_ids=(engine.eos_id, dot_id))
+        total_tokens += int(np.sum(np.asarray(out) != engine.pad_id))
+        # decode() keeps the '.' stop token (a regular byte) and drops pads
+        texts = [t + tok.decode(row) for t, row in zip(texts, out.tolist())]
+        # PRM-score each candidate prefix
+        if hasattr(prm, "score_steps"):
+            scores = jnp.array(
+                [float(prm.score_steps(task, t)[-1]) for t in texts])
+        else:  # logprob PRM fallback
+            scores = prm.score_states(state.logprob_sum, state.n_gen)
+        keep = jnp.argsort(-scores)[:width]
+        state = engine.reorder(state, keep)
+        texts = [texts[int(i)] for i in keep]
+        if all("A:" in t for t in texts):
+            break
+
+    # final selection: best-scoring finished beam
+    if hasattr(prm, "score_texts"):
+        final_scores = prm.score_texts(task, texts)
+    else:
+        final_scores = prm.score_states(state.logprob_sum, state.n_gen)
+    chosen = int(jnp.argmax(final_scores))
+    ans = T.extract_answer(texts[chosen])
+    return TTSResult(
+        completions=texts,
+        scores=final_scores,
+        chosen=chosen,
+        answer=ans,
+        correct=(ans == task.answer) if ans is not None else False,
+        decode_tokens=total_tokens,
+    )

@@ -1,0 +1,72 @@
+"""Best-of-N parallel test-time scaling (paper §2.1, Fig. 1 left).
+
+One prefill per prompt; the KV cache is forked N ways and all N samples
+decode in a single batch — the exact workload that fills the idle matrix
+unit rows during decode (paper §3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import tasks as T
+from repro.data.tokenizer import ByteTokenizer
+from repro.serving.engine import DecodeEngine
+from repro.serving.sampler import SamplerConfig
+
+
+@dataclasses.dataclass
+class TTSResult:
+    completions: list          # list[str], length N (or B*N flattened)
+    scores: jnp.ndarray
+    chosen: int
+    answer: Optional[int]
+    correct: Optional[bool]
+    decode_tokens: int         # total decode cost (batch-steps summed)
+
+
+def best_of_n(engine: DecodeEngine, tok: ByteTokenizer, task: T.MathTask,
+              *, n: int, max_tokens: int, rng, scorer,
+              sc: SamplerConfig = SamplerConfig(temperature=0.8),
+              prompt_len: int = 64) -> TTSResult:
+    """Generate N samples of one task, pick the scorer's argmax."""
+    ids, lens = tok.encode_batch([task.prompt], prompt_len)
+    state = engine.prefill(jnp.asarray(ids), jnp.asarray(lens))
+    state = engine.fork(state, n)
+    rng, k = jax.random.split(rng)
+    state, out = engine.generate(state, max_tokens, k, sc)
+    completions = [tok.decode(row) for row in out.tolist()]
+
+    if hasattr(scorer, "score_texts"):
+        scores = scorer.score_texts(task, completions)
+    else:  # LogProbScorer
+        scores = scorer.score_states(state.logprob_sum, state.n_gen)
+    chosen = int(jnp.argmax(scores))
+    ans = T.extract_answer(completions[chosen])
+    return TTSResult(
+        completions=completions,
+        scores=scores,
+        chosen=chosen,
+        answer=ans,
+        correct=(ans == task.answer) if ans is not None else False,
+        decode_tokens=int(jnp.sum(state.n_gen)),
+    )
+
+
+def evaluate_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
+                       max_tokens: int, rng, scorer,
+                       sc: SamplerConfig = SamplerConfig(temperature=0.8)):
+    """Accuracy + cost over a task set (one Fig. 10 curve point)."""
+    correct, cost = 0, 0
+    for i, task in enumerate(tasks):
+        rng, k = jax.random.split(rng)
+        r = best_of_n(engine, tok, task, n=n, max_tokens=max_tokens, rng=k,
+                      scorer=scorer, sc=sc)
+        correct += int(r.correct)
+        cost += r.decode_tokens
+    return {"accuracy": correct / max(1, len(tasks)),
+            "decode_tokens": cost,
+            "n": n}

@@ -1,0 +1,58 @@
+"""Budget controller: maps a compute budget to a TTS configuration and runs
+the accuracy/cost sweep behind the paper's Pareto plots (Fig. 10)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+
+from repro.core import beam_search as BS
+from repro.core import best_of_n as BoN
+from repro.core import self_consistency as SC
+from repro.data import tasks as T
+
+
+@dataclasses.dataclass
+class TTSSpec:
+    method: str            # "best_of_n" | "self_consistency" | "beam_search"
+    budget: int            # N (parallel samples) or width*expand
+    max_tokens: int = 48
+    beam_width: int = 0    # beam search only
+    beam_expand: int = 0
+
+
+def run_method(engine, tok, task, spec: TTSSpec, rng, scorer):
+    if spec.method == "best_of_n":
+        return BoN.best_of_n(engine, tok, task, n=spec.budget,
+                             max_tokens=spec.max_tokens, rng=rng,
+                             scorer=scorer)
+    if spec.method == "self_consistency":
+        return SC.self_consistency(engine, tok, task, n=spec.budget,
+                                   max_tokens=spec.max_tokens, rng=rng)
+    if spec.method == "beam_search":
+        width = spec.beam_width or max(1, spec.budget // 2)
+        expand = spec.beam_expand or 2
+        return BS.beam_search(engine, tok, task, width=width, expand=expand,
+                              rng=rng, prm=scorer)
+    raise ValueError(spec.method)
+
+
+def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
+          rng, scorer):
+    """Accuracy / decode-cost for each spec — one row per Pareto point."""
+    rows = []
+    for spec in specs:
+        correct = cost = 0
+        for task in tasks:
+            rng, k = jax.random.split(rng)
+            r = run_method(engine, tok, task, spec, k, scorer)
+            correct += int(r.correct)
+            cost += r.decode_tokens
+        rows.append({
+            "method": spec.method,
+            "budget": spec.budget,
+            "accuracy": correct / max(1, len(tasks)),
+            "decode_tokens": cost,
+        })
+    return rows

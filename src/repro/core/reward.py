@@ -1,0 +1,125 @@
+"""Reward / scoring models for test-time scaling (ORM and PRM roles).
+
+Three scorers mirroring the paper's §2.1 taxonomy:
+
+* ``OracleVerifier`` — outcome check against the verifiable task answer
+  (the paper's Best-of-N upper bound / coverage, Fig. 5);
+* ``LogProbScorer`` — model self-certainty (mean sampled logprob), a
+  verifier-free ORM baseline;
+* ``LearnedScorer`` — a trained value model (Skywork-PRM stand-in): a small
+  transformer trunk + scalar head scoring (prompt ⊕ completion) prefixes.
+  The same model serves as ORM (score the full sequence) and PRM (score
+  each step prefix).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data import tasks as T
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import layers as L
+from repro.models import transformer as TR
+
+
+class OracleVerifier:
+    """Outcome-reward oracle for verifiable tasks."""
+
+    def score_texts(self, task: T.MathTask, completions: Sequence[str]):
+        return jnp.array([1.0 if T.verify(task, c) else 0.0
+                          for c in completions], jnp.float32)
+
+
+class LogProbScorer:
+    """Self-certainty ORM: length-normalized cumulative sample logprob."""
+
+    def score_states(self, logprob_sum, n_gen):
+        return logprob_sum / jnp.maximum(n_gen, 1)
+
+
+# ---------------------------------------------------------------------------
+# Learned scorer (ORM / PRM)
+# ---------------------------------------------------------------------------
+
+
+def reward_config(vocab_size: int, *, d_model: int = 64, n_layers: int = 2,
+                  n_heads: int = 4) -> ModelConfig:
+    return ModelConfig(
+        name="reward", family="transformer", n_layers=n_layers,
+        d_model=d_model, n_heads=n_heads, n_kv_heads=n_heads,
+        d_ff=d_model * 4, vocab_size=vocab_size, dtype="float32",
+        param_dtype="float32", remat="none")
+
+
+def init_reward_params(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    trunk = TR.init_params(k1, cfg)
+    trunk.pop("lm_head", None)
+    return {
+        "trunk": trunk,
+        "head": L.init_linear(k2, cfg.d_model, 1, bias=True,
+                              dtype=jnp.float32),
+    }
+
+
+def reward_apply(params, tokens, lengths, cfg: ModelConfig):
+    """tokens: (B, S) right-padded; -> scalar score (B,) (pre-sigmoid)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["trunk"]["embedding"], tokens, dtype)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    windows = TR.layer_windows(cfg)
+
+    def body(x, xs):
+        lp, w = xs
+        x, _, _ = TR._layer(lp, x, cfg, None, positions=positions, window=w)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, (params["trunk"]["layers"], windows))
+    x = L.rmsnorm(params["trunk"]["final_norm"], x, cfg.norm_eps)
+    h = x[jnp.arange(B), lengths - 1]  # causal trunk: last position summarizes
+    return L.linear(params["head"], h)[:, 0]
+
+
+def reward_loss(params, tokens, lengths, labels, cfg: ModelConfig):
+    """Binary cross-entropy on (sequence, correct?) pairs."""
+    logits = reward_apply(params, tokens, lengths, cfg)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels +
+        jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+class LearnedScorer:
+    """Trained ORM/PRM wrapper operating on text (tokenizes internally)."""
+
+    def __init__(self, params, cfg: ModelConfig, tok: ByteTokenizer,
+                 max_len: int = 256):
+        self.params = params
+        self.cfg = cfg
+        self.tok = tok
+        self.max_len = max_len
+        self._apply = jax.jit(partial(reward_apply, cfg=cfg))
+
+    def score_texts(self, task: T.MathTask, completions: Sequence[str]):
+        texts = [task.prompt + c for c in completions]
+        ids, lens = self.tok.encode_batch(texts, self.max_len)
+        return jax.nn.sigmoid(self._apply(self.params, jnp.asarray(ids),
+                                          jnp.asarray(lens)))
+
+    def score_steps(self, task: T.MathTask, completion: str):
+        """PRM mode: score every step prefix of a completion."""
+        steps = T.split_steps(completion)
+        prefixes, acc = [], ""
+        for s in steps:
+            acc += s
+            prefixes.append(task.prompt + acc)
+        if not prefixes:
+            prefixes = [task.prompt + completion]
+        ids, lens = self.tok.encode_batch(prefixes, self.max_len)
+        return jax.nn.sigmoid(self._apply(self.params, jnp.asarray(ids),
+                                          jnp.asarray(lens)))

@@ -1,0 +1,38 @@
+"""Self-consistency / majority voting (paper §2.1): verifier-free TTS."""
+from __future__ import annotations
+
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.best_of_n import TTSResult
+from repro.data import tasks as T
+from repro.data.tokenizer import ByteTokenizer
+from repro.serving.engine import DecodeEngine
+from repro.serving.sampler import SamplerConfig
+
+
+def self_consistency(engine: DecodeEngine, tok: ByteTokenizer,
+                     task: T.MathTask, *, n: int, max_tokens: int, rng,
+                     sc: SamplerConfig = SamplerConfig(temperature=0.8),
+                     prompt_len: int = 64) -> TTSResult:
+    ids, lens = tok.encode_batch([task.prompt], prompt_len)
+    state = engine.prefill(jnp.asarray(ids), jnp.asarray(lens))
+    state = engine.fork(state, n)
+    rng, k = jax.random.split(rng)
+    state, out = engine.generate(state, max_tokens, k, sc)
+    completions = [tok.decode(row) for row in out.tolist()]
+    answers = [T.extract_answer(c) for c in completions]
+    votes = Counter(a for a in answers if a is not None)
+    ans = votes.most_common(1)[0][0] if votes else None
+    chosen = answers.index(ans) if ans is not None else 0
+    return TTSResult(
+        completions=completions,
+        scores=jnp.array([votes.get(a, 0) if a is not None else 0
+                          for a in answers], jnp.float32),
+        chosen=chosen,
+        answer=ans,
+        correct=(ans == task.answer) if ans is not None else False,
+        decode_tokens=int(jnp.sum(state.n_gen)),
+    )

@@ -1,0 +1,31 @@
+"""Elastic scaling: move live state between meshes.
+
+Because checkpoints store *global* arrays (checkpoint/checkpointer.py) and
+sharding is derived from the param tree + a ParallelContext (distributed/
+sharding.py), scaling up/down is: build the new mesh, recompute shardings,
+``remesh`` (live) or ``restore`` (from disk).  No resharding-aware file
+format is needed — the manifest is mesh-agnostic by construction.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.distributed.sharding import ParallelContext, param_shardings
+
+
+def remesh(tree, new_par: ParallelContext, *, stacked_prefixes=("layers",)):
+    """Re-device_put a live pytree onto a new mesh's shardings."""
+    if new_par.mesh is None:
+        return jax.tree.map(lambda x: jax.device_get(x), tree)
+    sh = param_shardings(tree, new_par, stacked_prefixes=stacked_prefixes)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, sh)
+
+
+def elastic_restore(checkpointer, abstract_tree, new_par: ParallelContext,
+                    step: Optional[int] = None):
+    """Restore a checkpoint written under any previous mesh onto ``new_par``."""
+    sh = (param_shardings(abstract_tree, new_par)
+          if new_par.mesh is not None else None)
+    return checkpointer.restore(abstract_tree, step=step, shardings=sh)

@@ -1,0 +1,250 @@
+"""Sharding rules: logical axes -> PartitionSpec on the production mesh.
+
+Mesh axes (launch/mesh.py):
+  pod   — data-parallel across pods (multi-pod only)
+  data  — data-parallel / FSDP / sequence-parallel axis within a pod
+  model — tensor-parallel axis (heads, d_ff, vocab, experts' ff)
+
+Parameters carry *logical* axis names; ``spec_for`` maps them to mesh axes.
+This is the single place the parallelism layout is defined, so hillclimbing
+sharding changes (EXPERIMENTS.md §Perf) is a one-file edit.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis -> mesh axes (None = replicated).
+LOGICAL_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": "data",        # sequence-parallel KV cache (long-context decode)
+    "heads": "model",
+    "kv_heads": "model",
+    "embed": None,           # d_model replicated in TP...
+    "embed_fsdp": ("pod", "data"),  # ...but FSDP-sharded for storage
+    "act_seq": "model",      # Megatron-style sequence-sharded activations
+    "mlp": "model",
+    "vocab": "model",
+    "expert": None,
+    "stack": None,           # scan-stacked layer dim
+}
+
+
+@dataclass(frozen=True)
+class ParallelContext:
+    """Carried through model code; None mesh => single-device semantics."""
+
+    mesh: Optional[Mesh] = None
+    fsdp: bool = True              # shard params/optimizer over data axis too
+    # Flash-decoding: shard the KV-cache *sequence* dim over this axis and
+    # merge per-shard partial softmaxes with one tiny psum.  decode_* cells
+    # use "model" (batch occupies data); long_500k (batch=1) uses "data".
+    kv_seq_axis: Optional[str] = None
+    quantized: bool = False        # weights stored as int4 tile-quant
+    # Megatron-style sequence parallelism for the residual stream: the
+    # remat-saved layer inputs are sharded over ``model`` along seq, which
+    # divides saved-activation memory by the TP degree (training only).
+    shard_activations_seq: bool = False
+    # §Perf layout option for small models: tp=False turns the "model" axis
+    # into a second FSDP axis (no tensor parallelism): per-layer activation
+    # psums disappear and params/optimizer shard over all chips; collective
+    # cost becomes 3× params of all-gather/reduce-scatter instead of
+    # 2·L·B·S·d of psums — a large win when d_model is small (zamba2,
+    # mamba2) and a loss for 35B models. See EXPERIMENTS.md §Perf H2.
+    tp: bool = True
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return tuple(self.mesh.axis_names) if self.mesh is not None else ()
+
+    def _filter(self, axes):
+        """Drop mesh axes that do not exist (e.g. no 'pod' on single pod)."""
+        if axes is None:
+            return None
+        if isinstance(axes, str):
+            return axes if axes in self.axes else None
+        got = tuple(a for a in axes if a in self.axes)
+        return got if got else None
+
+    def spec(self, *logical) -> P:
+        parts = []
+        for name in logical:
+            if name is None:
+                parts.append(None)
+            elif name == "embed_fsdp" and not self.fsdp:
+                parts.append(None)  # serving: keep d_model replicated
+            elif name == "kv_seq" and self.kv_seq_axis is None:
+                parts.append(None)
+            elif name == "act_seq" and not self.shard_activations_seq:
+                parts.append(None)
+            elif not self.tp and name in ("heads", "kv_heads", "mlp",
+                                          "vocab", "act_seq"):
+                parts.append(None)  # fsdp-only layout: no tensor parallelism
+            elif not self.tp and name in ("embed_fsdp", "batch"):
+                # fsdp-only: params AND batch shard over every axis
+                parts.append(self._filter(("pod", "data", "model")))
+            else:
+                parts.append(self._filter(LOGICAL_RULES[name]))
+        return P(*parts)
+
+    def sharding(self, *logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def constrain(self, x, *logical):
+        if self.mesh is None:
+            return x
+        spec = self.spec(*logical)
+        # drop axis assignments that don't divide the dim (e.g. batch 2 on
+        # a 16-way data axis during small-batch decode)
+        parts = []
+        for dim, entry in zip(x.shape,
+                              tuple(spec) + (None,) * (x.ndim - len(spec))):
+            if entry is None:
+                parts.append(None)
+                continue
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            parts.append(entry if dim % size == 0 else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*parts)))
+
+    def batch_axes_for(self, batch_size: int):
+        """Mesh axes to shard a batch dim over, dropping axes (pod first)
+        until the batch divides — small decode batches fall back toward
+        replication instead of failing shard_map divisibility."""
+        import math as _math
+
+        axes = self._filter(("pod", "data"))
+        while axes is not None:
+            axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+            size = _math.prod(self.mesh.shape[a] for a in axes_t)
+            if batch_size % size == 0:
+                return axes
+            axes = axes_t[1:] if len(axes_t) > 1 else None
+        return None
+
+    @property
+    def n_data(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape.get("data", 1)
+
+    @property
+    def n_model(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape.get("model", 1)
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules (path regex -> logical axes per dim).
+#
+# Param pytrees are nested dicts; paths look like
+# "layers/attn/wq/w", "layers/ffn/experts/gate", "embedding/table", ...
+# Stacked (scanned) layer params have a leading "stack" dim.
+# ---------------------------------------------------------------------------
+
+PARAM_RULES = [
+    # embeddings / lm head: vocab-sharded (beyond-paper: distributed sampling)
+    (r".*embedding/table$", ("vocab", "embed")),
+    (r".*lm_head/table$", ("vocab", "embed")),
+    (r".*patch_proj/w$", ("embed_fsdp", None)),
+    # attention projections
+    (r".*w[qkv]/w$", ("embed_fsdp", "heads")),
+    (r".*wo/w$", ("heads", "embed_fsdp")),
+    (r".*w[qkv]/b$", ("heads",)),
+    # dense FFN
+    (r".*(gate|up|fc1)/w$", ("embed_fsdp", "mlp")),
+    (r".*(down|fc2)/w$", ("mlp", "embed_fsdp")),
+    (r".*fc1/b$", ("mlp",)),
+    (r".*fc2/b$", (None,)),
+    # MoE
+    (r".*router/w$", (None, None)),
+    (r".*experts/(gate|up)$", ("expert", "embed_fsdp", "mlp")),
+    (r".*experts/down$", ("expert", "mlp", "embed_fsdp")),
+    # mamba2
+    (r".*in_proj/w$", ("embed_fsdp", "mlp")),
+    (r".*out_proj/w$", ("mlp", "embed_fsdp")),
+    (r".*conv/w$", (None, "mlp")),
+    (r".*conv/b$", ("mlp",)),
+    (r".*(A_log|dt_bias|D)$", ("mlp",)),
+    # norms / scalars
+    (r".*(scale|bias)$", (None,)),
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", k)) for k in path)
+
+
+def logical_axes_for(path: str, ndim: int, stacked: bool) -> Tuple:
+    base = None
+    for pat, axes in PARAM_RULES:
+        if re.match(pat, path):
+            base = axes
+            break
+    if base is None:
+        base = (None,) * (ndim - (1 if stacked else 0))
+    if stacked:
+        base = ("stack",) + tuple(base)
+    # pad/trim to ndim
+    base = tuple(base)[:ndim]
+    base = base + (None,) * (ndim - len(base))
+    return base
+
+
+def param_specs(params, par: ParallelContext, stacked_prefixes=("layers",)):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+
+    def _divisible(spec: P, shape) -> P:
+        """Drop axis assignments that do not evenly divide the dim (e.g. a
+        151655 vocab cannot 16-way shard; GSPMD-with-SDS rejects padding)."""
+        if par.mesh is None:
+            return spec
+        parts = []
+        for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+            if entry is None:
+                parts.append(None)
+                continue
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            size = 1
+            for a in axes:
+                size *= par.mesh.shape[a]
+            parts.append(entry if dim % size == 0 else None)
+        return P(*parts)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        # Quantized leaves live under the original weight path
+        # (".../wq/w/codes"): shard codes/scales like the weight itself,
+        # extra (tile) dims replicated; codebooks replicated.
+        qsuffix = None
+        for suf in ("/codes", "/scales", "/codebook", "/meta"):
+            if ps.endswith(suf):
+                qsuffix = suf
+                ps = ps[: -len(suf)]
+                break
+        if qsuffix in ("/codebook", "/meta"):
+            return par.spec(*([None] * leaf.ndim))
+        stacked = any(ps.startswith(pref) or f"/{pref}/" in ps for pref in stacked_prefixes)
+        axes = logical_axes_for(ps, leaf.ndim, stacked)
+        return _divisible(par.spec(*axes), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, par: ParallelContext, **kw):
+    if par.mesh is None:
+        return None
+    specs = param_specs(params, par, **kw)
+    return jax.tree.map(lambda s: NamedSharding(par.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

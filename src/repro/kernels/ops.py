@@ -1,0 +1,93 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret=True`` everywhere by default: this container is CPU-only and
+interpret mode executes the kernel bodies in Python for correctness; on a
+real TPU set ``repro.kernels.ops.INTERPRET = False`` (or env
+``REPRO_PALLAS_INTERPRET=0``) and the same BlockSpecs compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import lut_dequant_gemm as _gemm
+from repro.kernels import lut_softmax_attention as _attn
+from repro.kernels import tile_quantize as _tq
+from repro.quant import tile_quant as TQ
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+_EXP_LUT = None
+
+
+def exp_lut():
+    global _EXP_LUT
+    if _EXP_LUT is None:
+        _EXP_LUT = _attn.build_exp_lut()
+    return _EXP_LUT
+
+
+def _pick_block(n: int, target: int, multiple_of: int = 1) -> int:
+    """Largest divisor of n that is <= target and a multiple of
+    ``multiple_of`` (falls back to n itself)."""
+    b = min(n, target)
+    while b > 1 and (n % b or b % multiple_of):
+        b -= 1
+    if b <= 1 or b % multiple_of:
+        return n
+    return b
+
+
+def lut_dequant_matmul(x, qw: dict, *, group_size: int = 32):
+    """x: (M, K); qw: quantized-weight leaf dict -> (M, N)."""
+    codes, scales = qw["codes"], qw["scales"]
+    scheme = TQ.infer_scheme(qw, group_size)
+    M, K = x.shape
+    N = codes.shape[1] * 2
+    bm = _pick_block(M, 128)
+    # block sizes must respect group geometry
+    if scheme == "tile":
+        bk = _pick_block(K, 128, multiple_of=2)
+        bn = _pick_block(N, 256, multiple_of=group_size // 2)
+    else:
+        bk = _pick_block(K, 128, multiple_of=group_size)
+        bn = _pick_block(N, 256, multiple_of=2)
+    return _gemm.lut_dequant_gemm(
+        x, codes, scales, qw["codebook"], scheme=scheme,
+        group_size=group_size, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, exp_mode: str = "lut",
+                    bq: int = 128, bkv: int = 128):
+    """LUT-softmax FlashAttention with GQA support.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) — any fp dtype, computed in
+    fp16 per Alg. 1. Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qt = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D).astype(jnp.float16)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * Hq, Skv, D).astype(jnp.float16)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * Hq, Skv, D).astype(jnp.float16)
+    o = _attn.lut_softmax_attention(
+        qt, kt, vt, exp_lut(), causal=causal,
+        bq=_pick_block(Sq, bq), bkv=_pick_block(Skv, bkv),
+        interpret=INTERPRET, exp_mode=exp_mode)
+    return o.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def tile_quantize_op(w, *, group_size: int = 32):
+    """Kernel-quantize a (K, N) weight -> quantized leaf dict."""
+    K, N = w.shape
+    codes, scales = _tq.tile_quantize(
+        w, group_size=group_size, bk=_pick_block(K, 128),
+        bn=_pick_block(N, 256), interpret=INTERPRET)
+    from repro.quant.codebooks import get_codebook
+
+    return {"codes": codes, "scales": scales, "codebook": get_codebook("q4_0")}

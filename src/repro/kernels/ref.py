@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (per-kernel allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import tile_quant as TQ
+from repro.kernels.lut_softmax_attention import NEG_CAP, build_exp_lut, LUT_SIZE
+
+
+def dequant_matmul_ref(x, codes, scales, codebook, *, group_size: int = 32):
+    """Oracle for lut_dequant_gemm: dequantize-then-matmul in plain jnp."""
+    qw = {"codes": codes, "scales": scales, "codebook": codebook}
+    w = TQ.dequantize(qw, dtype=jnp.float32, group_size=group_size)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def tile_quantize_ref(w, *, group_size: int = 32):
+    """Oracle for tile_quantize: the offline quantizer with the q4_0 grid."""
+    qw = TQ.quantize(w, scheme="tile", codebook="q4_0", group_size=group_size)
+    return qw["codes"], qw["scales"]
+
+
+def _lut_exp_ref(lut, x16):
+    bits = jax.lax.bitcast_convert_type(x16, jnp.uint16)
+    idx = jnp.bitwise_and(bits.astype(jnp.int32), 0x7FFF)
+    return jnp.take(lut[0], idx, axis=0)
+
+
+def lut_flash_attention_ref(q, k, v, lut=None, *, causal: bool = True,
+                            bkv: int = 128, exp_mode: str = "lut"):
+    """Bit-faithful oracle for lut_softmax_attention.
+
+    Runs the same FP16 online-softmax recurrence (Alg. 1) with the same KV
+    blocking in plain jnp (python loop over KV blocks), so the kernel must
+    match to ~fp16 resolution.
+    q/k/v: (BH, S, D) fp16.
+    """
+    if lut is None:
+        lut = build_exp_lut()
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    bkv = min(bkv, Skv)
+    scale = 1.0 / math.sqrt(D)
+    nkv = Skv // bkv
+
+    m = jnp.full((BH, Sq, 1), NEG_CAP, jnp.float16)
+    l = jnp.zeros((BH, Sq, 1), jnp.float32)
+    acc = jnp.zeros((BH, Sq, D), jnp.float32)
+    qpos = jnp.arange(Sq)[:, None]
+
+    for j in range(nkv):
+        kj = k[:, j * bkv:(j + 1) * bkv]
+        vj = v[:, j * bkv:(j + 1) * bkv]
+        s = jnp.einsum("bqd,bkd->bqk", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            kpos = j * bkv + jnp.arange(bkv)[None]
+            s = jnp.where(kpos <= qpos, s, NEG_CAP)
+        s16 = s.astype(jnp.float16)
+        m_new = jnp.maximum(m, jnp.max(s16, axis=-1, keepdims=True))
+        x = s16 - m_new
+        if exp_mode == "lut":
+            p = _lut_exp_ref(lut, x)
+            corr = _lut_exp_ref(lut, m - m_new)
+        else:
+            p = jnp.exp(x.astype(jnp.float32)).astype(jnp.float16)
+            corr = jnp.exp((m - m_new).astype(jnp.float32)).astype(jnp.float16)
+        corr_f = corr.astype(jnp.float32)
+        l = l * corr_f + jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+        acc = acc * corr_f + jnp.einsum(
+            "bqk,bkd->bqd", p, vj.astype(jnp.float16),
+            preferred_element_type=jnp.float32)
+        m = m_new
+    return (acc / jnp.maximum(l, 1e-30)).astype(jnp.float16)
+
+
+def attention_f32_ref(q, k, v, *, causal: bool = True):
+    """Conventional F32 attention (the paper's Table-5 baseline)."""
+    BH, Sq, D = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        Skv = k.shape[1]
+        mask = jnp.arange(Skv)[None] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))

@@ -1,0 +1,74 @@
+"""Serving entrypoint: batched decode with test-time scaling.
+
+CPU-scale (real execution, reduced config):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-1.5b --smoke \
+      --method best_of_n --budget 8 --tasks 10 [--quantize] [--ckpt runs/ckpt]
+
+The production path is the same engine under the production mesh
+(launch/dryrun.py proves the serve_step lowers for every arch × shape).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.core import reward as R
+from repro.core.controller import TTSSpec, sweep
+from repro.data import tasks as T
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import api
+from repro.serving.engine import DecodeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--method", default="best_of_n",
+                    choices=["best_of_n", "self_consistency", "beam_search"])
+    ap.add_argument("--budget", type=int, default=8)
+    ap.add_argument("--tasks", type=int, default=10)
+    ap.add_argument("--max-tokens", type=int, default=48)
+    ap.add_argument("--quantize", action="store_true",
+                    help="apply tile-group W4A16 quantization (paper §5.1)")
+    ap.add_argument("--ckpt", default="", help="restore trained params")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tok = ByteTokenizer()
+    if cfg.vocab_size < tok.vocab_size:
+        cfg = cfg.with_(vocab_size=tok.vocab_size)
+    model = api.get_model(cfg)
+
+    if args.ckpt:
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        ckpt = Checkpointer(args.ckpt)  # params-only checkpoint dir
+        params, _ = ckpt.restore(model.abstract_params(cfg))
+    else:
+        params = model.init_params(jax.random.key(0), cfg)
+
+    if args.quantize:
+        from repro.quant.qlinear import quantize_model_params
+
+        params = quantize_model_params(params)
+        print("[serve] weights quantized: tile-group Q4_0 + Q8_0 down-proj")
+
+    engine = DecodeEngine(params, cfg, max_len=256, eos_id=tok.eos_id,
+                          pad_id=tok.pad_id)
+    tasks = T.gen_dataset(123, args.tasks)
+    scorer = R.OracleVerifier()
+    spec = TTSSpec(method=args.method, budget=args.budget,
+                   max_tokens=args.max_tokens)
+    rows = sweep(engine, tok, tasks, [spec], jax.random.key(0), scorer)
+    for r in rows:
+        print(f"[serve] {r['method']} budget={r['budget']} "
+              f"accuracy={r['accuracy']:.3f} "
+              f"decode_tokens={r['decode_tokens']}")
+
+
+if __name__ == "__main__":
+    main()

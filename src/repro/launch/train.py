@@ -1,0 +1,119 @@
+"""Training entrypoint.
+
+CPU-scale run (real execution):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-1.5b --smoke \
+      --steps 100 --batch 8 --seq 128 --ckpt-dir runs/ckpt
+
+On a real cluster every host runs this same command; jax.distributed
+initializes from the environment, the mesh spans all pods, and the
+checkpoint/restart + preemption machinery below gives fault tolerance:
+relaunching the identical command resumes from the latest checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.registry import get_config
+from repro.data.dataset import MathDataLoader
+from repro.data.tokenizer import ByteTokenizer
+from repro.distributed.fault_tolerance import (PreemptionHandler,
+                                               StragglerMonitor,
+                                               resume_or_init)
+from repro.distributed.sharding import ParallelContext
+from repro.models import api
+from repro.train.loop import make_train_step
+from repro.train.optimizer import AdamWConfig, init_opt_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="", help="e.g. 2x1: data x model")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tok = ByteTokenizer(vocab_size=max(320, cfg.vocab_size))
+    if cfg.vocab_size < tok.vocab_size:
+        cfg = cfg.with_(vocab_size=tok.vocab_size)
+
+    par = ParallelContext()
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        d, m = (int(x) for x in args.mesh.split("x"))
+        par = ParallelContext(mesh=make_host_mesh(d, m),
+                              shard_activations_seq=True)
+
+    model = api.get_model(cfg)
+    oc = AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, oc, par,
+                                      microbatches=args.microbatches))
+
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    abstract = {
+        "params": model.abstract_params(cfg),
+        "opt": jax.eval_shape(lambda: init_opt_state(
+            model.abstract_params(cfg))),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+    def init():
+        p = model.init_params(jax.random.key(0), cfg)
+        return {"params": p, "opt": init_opt_state(p),
+                "step": jnp.zeros((), jnp.int32)}
+
+    if ckpt is not None:
+        state, start = resume_or_init(ckpt, abstract, init)
+    else:
+        state, start = init(), 0
+    start = int(state["step"])
+
+    loader = MathDataLoader(tok, batch_size=args.batch, seq_len=args.seq,
+                            host_id=jax.process_index(),
+                            n_hosts=jax.process_count())
+    monitor = StragglerMonitor()
+
+    def emergency_save():
+        if ckpt is not None:
+            print("[ft] preemption — emergency checkpoint")
+            ckpt.save(state, step=int(state["step"]))
+
+    import time
+    with PreemptionHandler(emergency_save) as ph:
+        t0 = time.time()
+        for i in range(start, args.steps):
+            batch = tuple(jnp.asarray(b) for b in next(loader))
+            p, o, metrics = step_fn(state["params"], state["opt"], batch)
+            state = {"params": p, "opt": o,
+                     "step": jnp.asarray(i + 1, jnp.int32)}
+            monitor.record_step(time.time() - t0)
+            t0 = time.time()
+            if i % 20 == 0 or i == args.steps - 1:
+                print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
+                      f"lr {float(metrics['lr']):.2e}")
+            if ckpt is not None and (i + 1) % args.ckpt_every == 0:
+                ckpt.save_async(state, step=i + 1)
+            if ph.preempted:
+                break
+    if ckpt is not None:
+        ckpt.wait()
+        ckpt.save(state, step=int(state["step"]))
+    loader.close()
+    print("[train] done;", monitor.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Uniform model API across families.
+
+Every family module exposes:
+  init_params(key, cfg) / abstract_params(cfg)
+  forward(params, tokens, cfg, par, *, embeddings=None, return_kv=False)
+      -> (logits, kv_or_states, aux_loss)
+  prefill(params, tokens, cfg, par, *, max_len, embeddings=None)
+      -> (last_logits, cache)
+  decode_step(params, tokens, cache, cache_len, cfg, par)
+      -> (logits, new_cache)
+  init_cache(cfg, batch, max_len) / abstract_cache(...)
+"""
+from __future__ import annotations
+
+from types import ModuleType
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2, transformer, whisper
+
+
+def get_model(cfg: ModelConfig) -> ModuleType:
+    if cfg.family in ("transformer",):
+        return transformer
+    if cfg.family in ("mamba2", "hybrid"):
+        return mamba2
+    if cfg.family == "encdec":
+        return whisper
+    raise ValueError(f"unknown model family: {cfg.family}")

@@ -1,0 +1,418 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) and the Zamba2-style
+hybrid (Mamba2 backbone + one *shared* attention block applied every K layers,
+arXiv:2411.15242).
+
+Training / prefill use the chunked SSD algorithm: quadratic attention-like
+compute *within* chunks of Q tokens plus a linear inter-chunk state scan —
+sub-quadratic in sequence length, which is what qualifies these archs for
+the long_500k shape.  Decode is the O(1)-per-step recurrence
+    h ← h·e^{Δ·A} + Δ·x⊗B ;  y = C·h + D·x
+with a rolling conv-state buffer.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParallelContext
+from repro.models import layers as L
+
+# ---------------------------------------------------------------------------
+# Single Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    conv_dim = di + 2 * s.ngroups * s.d_state
+    return s, di, H, conv_dim
+
+
+def init_mamba_layer(key, cfg: ModelConfig, dtype) -> dict:
+    s, di, H, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_in_proj = 2 * di + 2 * s.ngroups * s.d_state + H
+    return {
+        "norm": L.init_rmsnorm(d),
+        "in_proj": L.init_linear(k1, d, d_in_proj, bias=False, dtype=dtype),
+        "conv": {
+            "w": jax.random.normal(k2, (s.conv_width, conv_dim), jnp.float32)
+            .astype(dtype) * (1.0 / math.sqrt(s.conv_width)),
+            "b": jnp.zeros((conv_dim,), dtype),
+        },
+        "A_log": jnp.zeros((H,), jnp.float32),       # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),  # softplus ≈ 0.12
+        "D": jnp.ones((H,), jnp.float32),
+        "gated_norm": L.init_rmsnorm(di),
+        "out_proj": L.init_linear(k3, di, d, bias=False, dtype=dtype),
+    }
+
+
+def _causal_conv(p, x):
+    """Depthwise causal conv, width W. x: (B, S, C) -> (B, S, C)."""
+    W = p["w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = sum(xp[:, i: i + x.shape[1]] * p["w"][i].astype(x.dtype) for i in range(W))
+    return y + p["b"].astype(x.dtype)
+
+
+def _split_in_proj(zxbcdt, cfg):
+    s, di, H, _ = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * gn], axis=-1)
+    return z, xBC, dt
+
+
+def _ssd_chunked(x, dt, A, B_mat, C_mat, cfg, initial_state=None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); A: (H,) negative;
+    B_mat, C_mat: (B, S, G, N).  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    s = cfg.ssm
+    Bb, S, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    Q = min(s.chunk_size, S)
+    S_orig = S
+    if S % Q:
+        # pad tail with dt=0 (decay 1, no state update) — safe for causal scan
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    rep = H // G
+
+    f32 = jnp.float32
+    da = (dt * A[None, None]).astype(f32)            # (B, S, H), negative
+    dtx = (x * dt[..., None].astype(x.dtype))        # (B, S, H, P)
+
+    def chunk(t):  # (B, S, ...) -> (B, nc, Q, ...)
+        return t.reshape(Bb, nc, Q, *t.shape[2:])
+
+    da_c = chunk(da)
+    cs = jnp.cumsum(da_c, axis=2)                    # (B, nc, Q, H) inclusive
+    dtx_c = chunk(dtx)
+    B_c = chunk(B_mat)                               # (B, nc, Q, G, N)
+    C_c = chunk(C_mat)
+
+    # --- intra-chunk (quadratic within chunk)
+    # decay L[q, s] = exp(cs[q] - cs[s]) for s <= q
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcqgn,bcsgn->bcqsg", C_c.astype(f32), B_c.astype(f32))
+    if G == 1:
+        cb_h = jnp.broadcast_to(cb, (*cb.shape[:-1], H))
+    else:
+        cb_h = jnp.repeat(cb, rep, axis=-1)  # (B,nc,Q,Q,H)
+    w = (cb_h * Lmat).astype(x.dtype)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", w, dtx_c,
+                         preferred_element_type=f32)
+
+    # --- per-chunk states: sum_s exp(cs_last - cs[s]) dtx[s] ⊗ B[s]
+    last = cs[:, :, -1:, :]                           # (B,nc,1,H)
+    decay_state = jnp.exp(last - cs)                  # (B,nc,Q,H)
+    Bh = B_c[:, :, :, :, None, :]                     # (B,nc,Q,G,1,N)
+    Bh = jnp.broadcast_to(Bh, (Bb, nc, Q, G, rep, N)).reshape(Bb, nc, Q, H, N)
+    states = jnp.einsum("bcqh,bcqhp,bcqhn->bchpn",
+                        decay_state.astype(f32), dtx_c.astype(f32), Bh.astype(f32))
+
+    # --- inter-chunk recurrence
+    chunk_decay = jnp.exp(last[:, :, 0, :])           # (B, nc, H)
+    h0 = (jnp.zeros((Bb, H, P, N), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    (h_final, h_prevs) = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prevs, 0, 1)               # (B, nc, H, P, N)
+
+    # --- inter-chunk output: C[q] · (h_prev · exp(cs[q]))
+    Ch = C_c[:, :, :, :, None, :]
+    Ch = jnp.broadcast_to(Ch, (Bb, nc, Q, G, rep, N)).reshape(Bb, nc, Q, H, N)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                         Ch.astype(f32), h_prev, jnp.exp(cs).astype(f32))
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, P).astype(x.dtype)
+    return y[:, :S_orig], h_final
+
+
+def mamba_layer(p, x, cfg: ModelConfig, par: Optional[ParallelContext] = None):
+    """Full-sequence Mamba2 block (train / prefill). Returns (y, final_states).
+
+    final_states = (conv_state (B, W-1, conv_dim), ssm_state (B, H, P, N)).
+    """
+    s, di, H, conv_dim = _dims(cfg)
+    B, S, _ = x.shape
+    hn = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    zxbcdt = L.linear(p["in_proj"], hn)
+    z, xBC, dt = _split_in_proj(zxbcdt, cfg)
+    conv_state = xBC[:, S - (s.conv_width - 1):, :]   # last W-1 raw inputs
+    xBC = jax.nn.silu(_causal_conv(p["conv"], xBC))
+    gn = s.ngroups * s.d_state
+    xs, B_mat, C_mat = jnp.split(xBC, [di, di + gn], axis=-1)
+    xs = xs.reshape(B, S, H, s.head_dim)
+    B_mat = B_mat.reshape(B, S, s.ngroups, s.d_state)
+    C_mat = C_mat.reshape(B, S, s.ngroups, s.d_state)
+    dt_a = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    y, h_final = _ssd_chunked(xs, dt_a, A, B_mat, C_mat, cfg)
+    y = y + xs * p["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, S, di)
+    y = L.rmsnorm(p["gated_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.linear(p["out_proj"], y)
+    return x + out, (conv_state, h_final)
+
+
+def mamba_decode_step(p, x, state, cfg: ModelConfig):
+    """One-token recurrent step. x: (B, 1, d); state = (conv, ssm)."""
+    s, di, H, conv_dim = _dims(cfg)
+    B = x.shape[0]
+    conv_st, ssm_st = state  # (B, W-1, conv_dim), (B, H, P, N) f32
+    hn = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    zxbcdt = L.linear(p["in_proj"], hn)
+    z, xBC, dt = _split_in_proj(zxbcdt, cfg)          # xBC: (B, 1, conv_dim)
+
+    window = jnp.concatenate([conv_st.astype(xBC.dtype), xBC], axis=1)  # (B, W, C)
+    w = p["conv"]["w"].astype(xBC.dtype)              # (W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, w) + p["conv"]["b"].astype(xBC.dtype)
+    xBC = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = window[:, 1:, :]
+
+    gn = s.ngroups * s.d_state
+    xs, B_mat, C_mat = jnp.split(xBC, [di, di + gn], axis=-1)
+    xs = xs.reshape(B, H, s.head_dim)
+    B_mat = B_mat.reshape(B, s.ngroups, s.d_state)
+    C_mat = C_mat.reshape(B, s.ngroups, s.d_state)
+    rep = H // s.ngroups
+    Bh = jnp.repeat(B_mat, rep, axis=1) if s.ngroups > 1 else (
+        jnp.broadcast_to(B_mat, (B, H, s.d_state)))
+    Ch = jnp.repeat(C_mat, rep, axis=1) if s.ngroups > 1 else (
+        jnp.broadcast_to(C_mat, (B, H, s.d_state)))
+
+    dt_a = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None])  # (B,H)
+    A = -jnp.exp(p["A_log"])                           # (H,)
+    decay = jnp.exp(dt_a * A[None])                    # (B,H)
+    f32 = jnp.float32
+    dx = xs.astype(f32) * dt_a[..., None]              # (B,H,P)
+    upd = dx[..., :, None] * Bh.astype(f32)[:, :, None, :]   # (B,H,P,N)
+    h = ssm_st.astype(f32) * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch.astype(f32))
+    y = y + xs.astype(f32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = L.rmsnorm(p["gated_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.linear(p["out_proj"], y)
+    return x + out, (new_conv.astype(conv_st.dtype), h)
+
+
+# ---------------------------------------------------------------------------
+# Full models (pure mamba2 and zamba2-style hybrid)
+# ---------------------------------------------------------------------------
+
+
+def _n_attn_apps(cfg: ModelConfig) -> int:
+    if cfg.family != "hybrid" or not cfg.hybrid_attn_every:
+        return 0
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kl, kh, ka, kf = jax.random.split(key, 5)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    params = {
+        "embedding": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": jax.vmap(partial(init_mamba_layer, cfg=cfg, dtype=dtype))(layer_keys),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_embedding(kh, cfg.vocab_size, cfg.d_model, dtype)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        params["shared_attn"] = {
+            "attn_norm": L.init_rmsnorm(cfg.d_model),
+            "attn": L.init_attention(ka, cfg, dtype),
+            "ffn_norm": L.init_rmsnorm(cfg.d_model),
+            "ffn": L.init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+def _shared_attn_apply(sp, x, cfg, par, *, positions, cache=None, cache_len=None):
+    h, kv = L.attention_block(
+        sp["attn"], L.rmsnorm(sp["attn_norm"], x, cfg.norm_eps), cfg,
+        positions=positions, window=0, cache=cache, cache_len=cache_len)
+    x = x + h
+    x = x + L.swiglu(sp["ffn"], L.rmsnorm(sp["ffn_norm"], x, cfg.norm_eps))
+    return x, kv
+
+
+def forward(params, tokens, cfg: ModelConfig, par: ParallelContext = None,
+            *, embeddings=None, return_kv: bool = False, logit_positions=None):
+    """Full-sequence forward. Returns (logits, (ssm_states, attn_kv), aux)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embedding"], tokens, dtype)
+    if par is not None:
+        x = par.constrain(x, "batch", "act_seq", None)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    every = cfg.hybrid_attn_every
+    n_apps = _n_attn_apps(cfg)
+
+    # hybrid: attention KV for each application point, carried through scan
+    if n_apps and return_kv:
+        hd = cfg.resolved_head_dim()
+        kv0 = jnp.zeros((n_apps, 2, B, S, cfg.n_kv_heads, hd), dtype)
+    else:
+        kv0 = None
+
+    def body(carry, xs):
+        x, kvs = carry
+        lp, i = xs
+        x, states = mamba_layer(lp, x, cfg, par)
+        if every:
+            def apply_attn(x_kvs):
+                x, kvs = x_kvs
+                x2, kv = _shared_attn_apply(params["shared_attn"], x, cfg, par,
+                                            positions=positions)
+                if kvs is not None:
+                    app = i // every
+                    kvs = jax.lax.dynamic_update_slice(
+                        kvs, jnp.stack(kv)[None].astype(kvs.dtype),
+                        (app, 0, 0, 0, 0, 0))
+                return (x2, kvs)
+
+            x, kvs = jax.lax.cond(i % every == every - 1, apply_attn,
+                                  lambda xk: xk, (x, kvs))
+        out = states if return_kv else None
+        return (x, kvs), out
+
+    body = jax.checkpoint(body) if cfg.remat == "full" else body
+    (x, kvs), states = jax.lax.scan(
+        body, (x, kv0),
+        (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logit_positions is not None:
+        x = x[jnp.arange(B), logit_positions]
+    head = params["embedding"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.lm_logits(head, x, cfg.logit_softcap)
+    return logits, (states, kvs), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    s, di, H, conv_dim = _dims(cfg)
+    cache = {
+        "conv": jnp.zeros((cfg.n_layers, batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, s.head_dim, s.d_state), jnp.float32),
+    }
+    n_apps = _n_attn_apps(cfg)
+    if n_apps:
+        hd = cfg.resolved_head_dim()
+        cache["attn_k"] = jnp.zeros((n_apps, batch, max_len, cfg.n_kv_heads, hd), dtype)
+        cache["attn_v"] = jnp.zeros((n_apps, batch, max_len, cfg.n_kv_heads, hd), dtype)
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    return jax.eval_shape(partial(init_cache, cfg, batch, max_len, dtype))
+
+
+def prefill(params, tokens, cfg: ModelConfig, par: ParallelContext = None,
+            *, max_len: int, embeddings=None, lengths=None):
+    """NOTE: the SSM recurrence consumes every input position, so unlike
+    attention families, right-padded *unequal* prompts would pollute the
+    state — callers must pass equal-length prompts (the TTS drivers share
+    one prompt across samples, which satisfies this)."""
+    B, S = tokens.shape
+    pos = (lengths - 1) if lengths is not None else jnp.full((B,), S - 1)
+    logits, (states, kvs), _ = forward(params, tokens, cfg, par,
+                                       embeddings=embeddings, return_kv=True,
+                                       logit_positions=pos)
+    conv_states, ssm_states = states  # (L,B,W-1,C), (L,B,H,P,N)
+    cache = init_cache(cfg, B, max_len)
+    cache["conv"] = conv_states.astype(cache["conv"].dtype)
+    cache["ssm"] = ssm_states
+    if kvs is not None:
+        k = kvs[:, 0]  # (n_apps, B, S, Hkv, D)
+        v = kvs[:, 1]
+        cache["attn_k"] = jax.lax.dynamic_update_slice(
+            cache["attn_k"], k.astype(cache["attn_k"].dtype), (0, 0, 0, 0, 0))
+        cache["attn_v"] = jax.lax.dynamic_update_slice(
+            cache["attn_v"], v.astype(cache["attn_v"].dtype), (0, 0, 0, 0, 0))
+    return logits, cache
+
+
+def decode_step(params, tokens, cache, cache_len, cfg: ModelConfig,
+                par: ParallelContext = None):
+    """One decode step for mamba2 / hybrid. Returns (logits, new_cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embedding"], tokens, dtype)
+    every = cfg.hybrid_attn_every
+    n_apps = _n_attn_apps(cfg)
+    positions = (cache_len - 1)[:, None]
+
+    has_attn = n_apps > 0
+    seq_par = par is not None and par.kv_seq_axis is not None
+
+    def body(carry, xs):
+        x, ak, av = carry
+        lp, conv_st, ssm_st, i = xs
+        x, (new_conv, new_ssm) = mamba_decode_step(lp, x, (conv_st, ssm_st), cfg)
+        if every:
+            def apply_attn(args):
+                x, ak, av = args
+                app = i // every
+                ck = jax.lax.dynamic_index_in_dim(ak, app, 0, keepdims=False)
+                cv = jax.lax.dynamic_index_in_dim(av, app, 0, keepdims=False)
+                sp = params["shared_attn"]
+                if seq_par:
+                    from repro.serving.seq_parallel import seq_parallel_decode_layer
+                    x2, nk, nv = seq_parallel_decode_layer(
+                        sp, x, cfg, par, cache_k=ck,
+                        cache_v=cv, cache_len=cache_len, window=0)
+                else:
+                    x2, kv = _shared_attn_apply(sp, x, cfg, par,
+                                                positions=positions,
+                                                cache={"k": ck, "v": cv},
+                                                cache_len=cache_len)
+                    nk, nv = kv
+                ak = jax.lax.dynamic_update_index_in_dim(ak, nk.astype(ak.dtype), app, 0)
+                av = jax.lax.dynamic_update_index_in_dim(av, nv.astype(av.dtype), app, 0)
+                return (x2, ak, av)
+
+            x, ak, av = jax.lax.cond(i % every == every - 1, apply_attn,
+                                     lambda a: a, (x, ak, av))
+        return (x, ak, av), (new_conv, new_ssm)
+
+    ak0 = cache.get("attn_k") if has_attn else jnp.zeros((1,), dtype)
+    av0 = cache.get("attn_v") if has_attn else jnp.zeros((1,), dtype)
+    (x, ak, av), (new_conv, new_ssm) = jax.lax.scan(
+        body, (x, ak0, av0),
+        (params["layers"], cache["conv"], cache["ssm"],
+         jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embedding"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.lm_logits(head, x[:, 0], cfg.logit_softcap)
+    new_cache = dict(cache, conv=new_conv, ssm=new_ssm)
+    if has_attn:
+        new_cache["attn_k"], new_cache["attn_v"] = ak, av
+    return logits, new_cache

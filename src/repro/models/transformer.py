@@ -1,0 +1,215 @@
+"""Unified decoder-only transformer covering the dense / GQA / bias / SWA /
+local:global / MoE members of the architecture pool.
+
+Layers are scanned (`jax.lax.scan` over stacked params) so the lowered HLO —
+and therefore dry-run compile time — is independent of depth.  Per-layer
+attention-pattern variation (gemma3's 5 local : 1 global) is expressed as a
+per-layer window array threaded through the scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParallelContext
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_ffn
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer sliding window sizes (0 = unbounded full attention)."""
+    if cfg.attn_pattern.startswith("local_global"):
+        ratio = int(cfg.attn_pattern.split(":")[1])
+        w = [cfg.window_size if (i % (ratio + 1)) != ratio else 0
+             for i in range(cfg.n_layers)]
+        return jnp.array(w, jnp.int32)
+    if cfg.window_size:
+        return jnp.full((cfg.n_layers,), cfg.window_size, jnp.int32)
+    return jnp.zeros((cfg.n_layers,), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, dtype) -> dict:
+    ka, kf = jax.random.split(key)
+    p = {
+        "attn_norm": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(ka, cfg, dtype),
+        "ffn_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.moe:
+        p["moe"] = init_moe(kf, cfg, dtype)
+    else:
+        p["ffn"] = L.init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kl, kh, kp = jax.random.split(key, 4)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    params = {
+        "embedding": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": jax.vmap(partial(_init_layer, cfg=cfg, dtype=dtype))(layer_keys),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_embedding(kh, cfg.vocab_size, cfg.d_model, dtype)
+    if cfg.frontend == "patch_stub":
+        params["patch_proj"] = L.init_linear(kp, cfg.d_model, cfg.d_model,
+                                             bias=False, dtype=dtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Layer body
+# ---------------------------------------------------------------------------
+
+
+def _layer(p, x, cfg, par, *, positions, window, cache=None, cache_len=None):
+    h, new_kv = L.attention_block(
+        p["attn"], L.rmsnorm(p["attn_norm"], x, cfg.norm_eps), cfg,
+        positions=positions, window=window, cache=cache, cache_len=cache_len)
+    x = x + h
+    hn = L.rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+    if cfg.moe:
+        h, aux = moe_ffn(p["moe"], hn, cfg, par)
+    else:
+        h, aux = L.swiglu(p["ffn"], hn), jnp.zeros((), jnp.float32)
+    if par is not None:
+        # act_seq: the layer-boundary residual (which remat saves) is
+        # sequence-sharded over the model axis (no-op unless enabled).
+        x = par.constrain(x + h, "batch", "act_seq", None)
+    else:
+        x = x + h
+    return x, new_kv, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def forward(params, tokens, cfg: ModelConfig, par: ParallelContext = None,
+            *, embeddings: Optional[jnp.ndarray] = None, return_kv: bool = False,
+            logit_positions: Optional[jnp.ndarray] = None):
+    """Full-sequence forward (training / prefill). Returns (logits, kv, aux).
+
+    tokens: (B, S) int32.  ``embeddings``: optional (B, P, d) modality-stub
+    prefix (VLM patches / audio frames) that replaces the embedding of the
+    first P positions.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embedding"], tokens, dtype)
+    if embeddings is not None:
+        pre = L.linear(params["patch_proj"], embeddings.astype(dtype))
+        x = jnp.concatenate([pre, x[:, embeddings.shape[1]:]], axis=1)
+    if par is not None:
+        x = par.constrain(x, "batch", "act_seq", None)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, w = xs
+        x, kv, a = _layer(lp, x, cfg, par, positions=positions, window=w)
+        return (x, aux + a), (kv if return_kv else None)
+
+    body = jax.checkpoint(body) if cfg.remat == "full" else body
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                 (params["layers"], windows))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logit_positions is not None:
+        # gather the true last position per sequence before the (large)
+        # lm_head matmul — avoids materializing (B, S, V) logits in prefill
+        x = x[jnp.arange(B), logit_positions]
+    head = params["embedding"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.lm_logits(head, x, cfg.logit_softcap)
+    return logits, kvs, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim()
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim()
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def prefill(params, tokens, cfg: ModelConfig, par: ParallelContext = None,
+            *, max_len: int, embeddings=None, lengths=None):
+    """Run the prompt, build the KV cache. Returns (next_logits, cache).
+
+    ``lengths``: (B,) true prompt lengths for right-padded batches; the
+    returned logits are taken at each sequence's true last position.
+    """
+    B, S = tokens.shape
+    pos = (lengths - 1) if lengths is not None else jnp.full((B,), S - 1)
+    logits, kvs, _ = forward(params, tokens, cfg, par, embeddings=embeddings,
+                             return_kv=True, logit_positions=pos)
+    cache = init_cache(cfg, B, max_len)
+    k, v = kvs  # (L, B, S, Hkv, D)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, 0, 0, 0)),
+    }
+    return logits, cache
+
+
+def decode_step(params, tokens, cache, cache_len, cfg: ModelConfig,
+                par: ParallelContext = None):
+    """One decode step.
+
+    tokens: (B, 1) int32 — current token.  cache: stacked (L, B, S, Hkv, D).
+    cache_len: (B,) int32 — sequence length *after* this token is appended.
+    Returns (logits (B, vocab) f32, new_cache).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embedding"], tokens, dtype)
+    if par is not None:
+        x = par.constrain(x, "batch", "act_seq", None)
+    positions = (cache_len - 1)[:, None]
+    windows = layer_windows(cfg)
+
+    seq_par = par is not None and par.kv_seq_axis is not None
+
+    def body(x, xs):
+        lp, w, ck, cv = xs
+        if seq_par:
+            from repro.serving.seq_parallel import seq_parallel_decode_layer
+            x, nk, nv = seq_parallel_decode_layer(
+                lp, x, cfg, par, cache_k=ck, cache_v=cv,
+                cache_len=cache_len, window=w)
+        else:
+            x, (nk, nv), _ = _layer(lp, x, cfg, par, positions=positions,
+                                    window=w, cache={"k": ck, "v": cv},
+                                    cache_len=cache_len)
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["layers"], windows, cache["k"], cache["v"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embedding"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.lm_logits(head, x[:, 0], cfg.logit_softcap)
+    return logits, {"k": nk, "v": nv}

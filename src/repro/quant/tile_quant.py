@@ -1,0 +1,155 @@
+"""Hardware-aware tile-group quantization (paper §5.1, adapted to TPU).
+
+Two group geometries over a (K, N) weight (K = reduction dim):
+
+* ``common``  — the conventional scheme: groups of ``g`` contiguous elements
+  along K, one scale per (g, 1) column strip.  This is the llama.cpp /
+  AutoAWQ layout the paper uses as baseline.
+
+* ``tile``    — the paper's scheme mapped to the TPU MXU register tile:
+  groups are (2, g//2) = (2 K-rows × 16 N-columns) rectangles — the exact
+  2×16 sub-tile shape of the Hexagon HMX layout (Fig. 4a), which on TPU
+  corresponds to a lane-contiguous strip inside a (16, 128) VREG tile.
+  Dequantization therefore reads codes *and* scales unit-stride, with no
+  scatter (Fig. 6's mismatch disappears by construction).
+
+Codes are packed two-per-byte along N (low nibble = even column) so one
+(8, 128) uint8 VMEM block holds a full (8, 256) int4 tile — the TPU
+analogue of the paper's §5.1.2 super-group coalescing: 8 groups of 32
+(= 256 codes = 128 bytes) land in one contiguous vector row.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.codebooks import codebook_absmax, get_codebook
+
+# Static metadata key (kept out of the jax pytree leaves on purpose: strings)
+SCHEMES = ("common", "tile")
+
+
+def pack_int4(codes: jnp.ndarray) -> jnp.ndarray:
+    """(K, N) uint8 in [0,15] -> (K, N//2) packed: low nibble = even col."""
+    lo = codes[:, 0::2]
+    hi = codes[:, 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """(K, N//2) uint8 -> (K, N) uint8 in [0,15]."""
+    lo = packed & 0xF
+    hi = packed >> 4
+    K, Nh = packed.shape
+    out = jnp.stack([lo, hi], axis=-1).reshape(K, Nh * 2)
+    return out
+
+
+def _nearest_code(wn: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-codebook-entry assignment. wn: normalized weights."""
+    d = jnp.abs(wn[..., None] - codebook)  # (..., 16)
+    return jnp.argmin(d, axis=-1).astype(jnp.uint8)
+
+
+def quantize(w: jnp.ndarray, *, scheme: str = "tile", codebook: str = "q4_0",
+             group_size: int = 32, scale_dtype=jnp.float16) -> dict:
+    """Weight-only 4-bit group quantization.
+
+    Returns a pytree-leaf dict: {"codes": (K, N//2) uint8, "scales": ...,
+    "codebook": (16,) f32}. ``scales`` shape is (K//g, N) for ``common`` and
+    (K//2, N//(g//2)) for ``tile``.
+    """
+    assert scheme in SCHEMES, scheme
+    K, N = w.shape
+    g = group_size
+    cb = get_codebook(codebook)
+    cmax = codebook_absmax(codebook)
+    wf = w.astype(jnp.float32)
+
+    if scheme == "common":
+        assert K % g == 0, (K, g)
+        wg = wf.reshape(K // g, g, N)
+        absmax = jnp.max(jnp.abs(wg), axis=1)                    # (K//g, N)
+        scales = (absmax / cmax).astype(scale_dtype)
+        sc = jnp.repeat(scales.astype(jnp.float32), g, axis=0)   # (K, N)
+    else:  # tile: (2, g//2) rectangles
+        gr, gc = 2, g // 2
+        assert K % gr == 0 and N % gc == 0, (K, N, g)
+        wg = wf.reshape(K // gr, gr, N // gc, gc)
+        absmax = jnp.max(jnp.abs(wg), axis=(1, 3))               # (K//2, N//gc)
+        scales = (absmax / cmax).astype(scale_dtype)
+        sc = jnp.repeat(jnp.repeat(scales.astype(jnp.float32), gr, axis=0),
+                        gc, axis=1)                              # (K, N)
+
+    sc = jnp.maximum(sc, 1e-8)
+    codes = _nearest_code(wf / sc, cb)                           # (K, N) uint8
+    return {
+        "codes": pack_int4(codes),
+        "scales": scales,
+        "codebook": cb,
+    }
+
+
+def infer_scheme(qw: dict, group_size: int = 32) -> str:
+    """Recover the group geometry from array shapes."""
+    K = qw["codes"].shape[0]
+    sk = qw["scales"].shape[0]
+    return "common" if sk == K // group_size else "tile"
+
+
+def dequantize(qw: dict, *, dtype=jnp.float32, group_size: int = 32) -> jnp.ndarray:
+    """Reference dequantization (pure jnp oracle for the Pallas kernel)."""
+    codes = unpack_int4(qw["codes"])                              # (K, N)
+    K, N = codes.shape
+    vals = qw["codebook"][codes.astype(jnp.int32)]                # LUT (§5.2.2)
+    scheme = infer_scheme(qw, group_size)
+    g = group_size
+    s = qw["scales"].astype(jnp.float32)
+    if scheme == "common":
+        sc = jnp.repeat(s, g, axis=0)
+    else:
+        gr, gc = 2, g // 2
+        sc = jnp.repeat(jnp.repeat(s, gr, axis=0), gc, axis=1)
+    return (vals * sc).astype(dtype)
+
+
+def quantize_q8(w: jnp.ndarray, *, group_size: int = 32,
+                scale_dtype=jnp.float16) -> dict:
+    """Q8_0-style 8-bit symmetric group quantization (FFN-down per §7.1)."""
+    K, N = w.shape
+    g = group_size
+    assert K % g == 0
+    wf = w.astype(jnp.float32)
+    wg = wf.reshape(K // g, g, N)
+    absmax = jnp.max(jnp.abs(wg), axis=1)
+    scales = (absmax / 127.0).astype(scale_dtype)
+    sc = jnp.maximum(jnp.repeat(scales.astype(jnp.float32), g, axis=0), 1e-8)
+    codes = jnp.clip(jnp.round(wf / sc), -127, 127).astype(jnp.int8)
+    return {"codes": codes, "scales": scales}
+
+
+def dequantize_q8(qw: dict, *, dtype=jnp.float32, group_size: int = 32) -> jnp.ndarray:
+    sc = jnp.repeat(qw["scales"].astype(jnp.float32), group_size, axis=0)
+    return (qw["codes"].astype(jnp.float32) * sc).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MXU tile layout transforms (the paper's offline pre/post-quantization
+# permutes, §5.1.1).  Used by the GEMM-ablation benchmark to contrast the
+# "conventional layout + runtime scatter" baseline with the tile layout.
+# ---------------------------------------------------------------------------
+
+
+def to_tile_layout(arr: jnp.ndarray, tk: int = 16, tn: int = 128) -> jnp.ndarray:
+    """(K, N) -> (K//tk, N//tn, tk, tn): column-major-of-tiles MXU order."""
+    K, N = arr.shape
+    assert K % tk == 0 and N % tn == 0
+    return arr.reshape(K // tk, tk, N // tn, tn).transpose(0, 2, 1, 3)
+
+
+def from_tile_layout(t: jnp.ndarray) -> jnp.ndarray:
+    kt, nt, tk, tn = t.shape
+    return t.transpose(0, 2, 1, 3).reshape(kt * tk, nt * tn)

@@ -1,0 +1,259 @@
+"""Batched decode engine.
+
+This is the system layer that realizes the paper's core observation: decode
+is weight-bandwidth-bound, so the matrix units have idle rows that parallel
+test-time-scaling samples can occupy for ~free.  The engine therefore
+treats *batch* as the first-class resource:
+
+* ``prefill`` runs the prompt once per unique prompt and yields the
+  next-token logits at each sequence's true last position;
+* ``fork`` replicates cache rows so N samples share one prompt's prefill
+  (Best-of-N / beam-search fan-out without re-prefilling);
+* ``reorder`` gathers the cache batch dim (beam-search survivor commit);
+* ``generate`` runs a jit'd lax.scan over decode steps with done-masking.
+
+The state carries ``pending_logits``: the logits the *next* token must be
+sampled from. Each step samples, feeds the token through decode_step
+(writing its KV at position cache_len), and replaces pending_logits — so no
+KV row is ever written twice and the first generated token is sampled from
+the prefill logits exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParallelContext
+from repro.models import api
+from repro.serving.sampler import SamplerConfig, logprobs_of, sample
+
+
+@dataclass
+class GenState:
+    """Decoding state for a batch of sequences (a jax pytree)."""
+
+    cache: dict
+    cache_len: jnp.ndarray       # (B,) int32 — prompt + generated so far
+    pending_logits: jnp.ndarray  # (B, V) f32 — next token sampled from these
+    done: jnp.ndarray            # (B,) bool
+    logprob_sum: jnp.ndarray     # (B,) f32 cumulative sampled logprob
+    n_gen: jnp.ndarray           # (B,) int32
+
+
+jax.tree_util.register_dataclass(
+    GenState,
+    data_fields=["cache", "cache_len", "pending_logits", "done",
+                 "logprob_sum", "n_gen"],
+    meta_fields=[])
+
+
+class DecodeEngine:
+    def __init__(self, params, cfg: ModelConfig,
+                 par: Optional[ParallelContext] = None, *, max_len: int = 512,
+                 eos_id: int = 1, pad_id: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.par = par
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.model = api.get_model(cfg)
+        self._prefill_jit = jax.jit(self._prefill_impl)
+        self._gen_jit = jax.jit(self._generate_impl,
+                                static_argnames=("n_steps", "sc", "stop_ids"))
+        self._step_jit = jax.jit(self._step_impl,
+                                 static_argnames=("sc", "stop_ids"))
+
+    # -- prefill ------------------------------------------------------------
+    def _prefill_impl(self, params, tokens, lengths, embeddings=None):
+        logits, cache = self.model.prefill(
+            params, tokens, self.cfg, self.par, max_len=self.max_len,
+            lengths=lengths,
+            **({"embeddings": embeddings} if embeddings is not None else {}))
+        return logits, cache
+
+    def prefill(self, tokens: jnp.ndarray, lengths: Optional[jnp.ndarray] = None,
+                embeddings=None) -> GenState:
+        """tokens: (B, S) right-padded prompts; lengths: (B,) true lengths."""
+        B, S = tokens.shape
+        if lengths is None:
+            lengths = jnp.full((B,), S, jnp.int32)
+        logits, cache = self._prefill_jit(self.params, tokens, lengths,
+                                          embeddings)
+        return GenState(
+            cache=cache,
+            cache_len=lengths.astype(jnp.int32),
+            pending_logits=logits.astype(jnp.float32),
+            done=jnp.zeros((B,), bool),
+            logprob_sum=jnp.zeros((B,), jnp.float32),
+            n_gen=jnp.zeros((B,), jnp.int32),
+        )
+
+    # -- fork / reorder (TTS batch fan-out) ----------------------------------
+    def fork(self, state: GenState, n: int) -> GenState:
+        """Replicate each sequence n times (prompt-shared Best-of-N).
+        Row i maps to rows [i*n, (i+1)*n)."""
+
+        def rep(x, axis):
+            return jnp.repeat(x, n, axis=axis)
+
+        return GenState(
+            cache=jax.tree.map(lambda x: rep(x, 1), state.cache),
+            cache_len=rep(state.cache_len, 0),
+            pending_logits=rep(state.pending_logits, 0),
+            done=rep(state.done, 0),
+            logprob_sum=rep(state.logprob_sum, 0),
+            n_gen=rep(state.n_gen, 0),
+        )
+
+    def reorder(self, state: GenState, idx: jnp.ndarray) -> GenState:
+        """Gather sequences by ``idx`` (beam-search survivor commit)."""
+        return GenState(
+            cache=jax.tree.map(lambda x: x[:, idx], state.cache),
+            cache_len=state.cache_len[idx],
+            pending_logits=state.pending_logits[idx],
+            done=state.done[idx],
+            logprob_sum=state.logprob_sum[idx],
+            n_gen=state.n_gen[idx],
+        )
+
+    # -- decode -------------------------------------------------------------
+    def _step_impl(self, params, state: GenState, rng, *, sc: SamplerConfig,
+                   stop_ids: tuple = ()):
+        stop_ids = tuple(stop_ids) or (self.eos_id,)
+        tok = sample(state.pending_logits, rng, sc)
+        lp = logprobs_of(state.pending_logits, tok)
+        tok = jnp.where(state.done, self.pad_id, tok).astype(jnp.int32)
+        new_done = state.done
+        for s in stop_ids:
+            new_done = new_done | (tok == s)
+        new_len = jnp.where(state.done, state.cache_len, state.cache_len + 1)
+        # Done rows must not clobber their last real KV slot: route their
+        # (discarded) write to the reserved scratch slot max_len-1.  Usable
+        # sequence length is therefore max_len - 1.
+        model_len = jnp.where(state.done, self.max_len, new_len)
+        logits, cache = self.model.decode_step(
+            params, tok[:, None], state.cache, model_len, self.cfg, self.par)
+        # Recurrent (non-positional) states have no scratch slot — restore
+        # them for done rows.  These leaves are small (SSM/conv states).
+        for key in ("conv", "ssm"):
+            if key in cache:
+                d = state.done.reshape((1, -1) + (1,) * (cache[key].ndim - 2))
+                cache[key] = jnp.where(d, state.cache[key], cache[key])
+        # Freeze pending logits on done rows so that resume() continues from
+        # the logits that followed the stop token, not scratch-slot garbage.
+        pending = jnp.where(state.done[:, None], state.pending_logits,
+                            logits.astype(jnp.float32))
+        new_state = GenState(
+            cache=cache,
+            cache_len=new_len,
+            pending_logits=pending,
+            done=new_done,
+            logprob_sum=state.logprob_sum + jnp.where(state.done, 0.0, lp),
+            n_gen=state.n_gen + jnp.where(state.done, 0, 1),
+        )
+        return new_state, tok
+
+    def step(self, state: GenState, rng, sc: SamplerConfig = SamplerConfig()):
+        """One decode step. Returns (new_state, sampled tokens (B,))."""
+        return self._step_jit(self.params, state, rng, sc=sc)
+
+    def _generate_impl(self, params, state: GenState, rng, *, n_steps: int,
+                       sc: SamplerConfig, stop_ids: tuple = ()):
+        def body(st, key):
+            st, tok = self._step_impl(params, st, key, sc=sc, stop_ids=stop_ids)
+            return st, tok
+
+        keys = jax.random.split(rng, n_steps)
+        state, toks = jax.lax.scan(body, state, keys)
+        return state, toks.T  # (B, n_steps)
+
+    def generate(self, state: GenState, n_steps: int, rng,
+                 sc: SamplerConfig = SamplerConfig(), stop_ids: tuple = ()):
+        """Decode up to n_steps tokens (stopping per-row at any id in
+        ``stop_ids``, default EOS). Returns (final_state, (B, n_steps) tokens,
+        pad_id after stop)."""
+        return self._gen_jit(self.params, state, rng, n_steps=n_steps, sc=sc,
+                             stop_ids=tuple(stop_ids))
+
+    def resume(self, state: GenState) -> GenState:
+        """Clear done flags (used by step-level beam search to continue
+        beams after a step-delimiter stop)."""
+        return GenState(
+            cache=state.cache, cache_len=state.cache_len,
+            pending_logits=state.pending_logits,
+            done=jnp.zeros_like(state.done),
+            logprob_sum=state.logprob_sum, n_gen=state.n_gen)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching scheduler (slot-based)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: jnp.ndarray          # (S,) int32
+    max_new_tokens: int = 64
+    out_tokens: Optional[list] = None
+
+
+class ContinuousScheduler:
+    """Slot-based continuous batching on top of DecodeEngine.
+
+    Fixed decode batch of ``n_slots``; finished sequences release their slot
+    which is refilled from the queue at the next prefill opportunity.  This
+    is the engine shape a production server uses; TTS workloads submit N
+    samples of one prompt as N requests sharing a prefill via fork.
+    """
+
+    def __init__(self, engine: DecodeEngine, n_slots: int = 8,
+                 prompt_len: int = 32):
+        self.engine = engine
+        self.n_slots = n_slots
+        self.prompt_len = prompt_len
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _pad(self, prompt):
+        S = self.prompt_len
+        out = jnp.full((S,), self.engine.pad_id, jnp.int32)
+        return out.at[: prompt.shape[0]].set(prompt), prompt.shape[0]
+
+    def run(self, rng, sc: SamplerConfig = SamplerConfig(), max_rounds: int = 64):
+        """Drain the queue. Returns {req_id: token list}."""
+        results = {}
+        round_ = 0
+        while (self.queue or self.active) and round_ < max_rounds:
+            round_ += 1
+            # fill free slots
+            take = min(self.n_slots - len(self.active), len(self.queue))
+            batch = [self.queue.pop(0) for _ in range(take)]
+            if not batch and not self.active:
+                break
+            if batch:
+                toks, lens = zip(*[self._pad(r.prompt) for r in batch])
+                state = self.engine.prefill(jnp.stack(toks),
+                                            jnp.array(lens, jnp.int32))
+                steps = max(r.max_new_tokens for r in batch)
+                rng, k = jax.random.split(rng)
+                state, out = self.engine.generate(state, steps, k, sc)
+                for i, r in enumerate(batch):
+                    toks_i = out[i][: r.max_new_tokens]
+                    # trim at EOS
+                    lst = []
+                    for t in toks_i.tolist():
+                        if t == self.engine.eos_id:
+                            break
+                        lst.append(t)
+                    results[r.req_id] = lst
+        return results

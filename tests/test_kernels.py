@@ -1,0 +1,105 @@
+"""Per-Pallas-kernel shape/dtype sweeps vs the pure-jnp oracles (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.lut_softmax_attention import build_exp_lut
+from repro.kernels.tile_quantize import tile_quantize
+from repro.quant import tile_quant as TQ
+
+KEY = jax.random.key(0)
+
+
+@pytest.mark.parametrize("scheme", ["tile", "common"])
+@pytest.mark.parametrize("codebook", ["q4_0", "nf4", "fp4", "iq4_nl"])
+@pytest.mark.parametrize("mkn", [(4, 64, 128), (8, 256, 512), (16, 128, 96),
+                                 (128, 512, 256)])
+def test_lut_dequant_gemm_vs_oracle(scheme, codebook, mkn):
+    M, K, N = mkn
+    w = jax.random.normal(jax.random.fold_in(KEY, hash((scheme, codebook, M)) %
+                                             2**31), (K, N)) * 0.1
+    x = jax.random.normal(KEY, (M, K), jnp.float32)
+    qw = TQ.quantize(w, scheme=scheme, codebook=codebook)
+    y_kernel = ops.lut_dequant_matmul(x, qw)
+    y_ref = ref.dequant_matmul_ref(x, qw["codes"], qw["scales"], qw["codebook"])
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lut_dequant_gemm_dtypes(dtype):
+    w = jax.random.normal(KEY, (128, 256)) * 0.1
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (8, 128)).astype(dtype)
+    qw = TQ.quantize(w, scheme="tile")
+    y = ops.lut_dequant_matmul(x, qw)
+    assert y.dtype == dtype
+    y_ref = ref.dequant_matmul_ref(x.astype(jnp.float32), qw["codes"],
+                                   qw["scales"], qw["codebook"])
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(y_ref),
+                               atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 128, 4, 2, 64),
+                                   (1, 256, 256, 8, 8, 32),
+                                   (2, 128, 384, 4, 1, 64)])
+@pytest.mark.parametrize("exp_mode", ["lut", "exact"])
+def test_lut_attention_vs_oracle(shape, exp_mode):
+    B, Sq, Skv, Hq, Hkv, D = shape
+    causal = Sq == Skv
+    q = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Sq, Hq, D)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (B, Skv, Hkv, D)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (B, Skv, Hkv, D)) * 0.5
+    o = ops.flash_attention(q, k, v, causal=causal, exp_mode=exp_mode)
+    # oracle runs the same fp16 blocked recurrence
+    G = Hq // Hkv
+    qt = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D).astype(jnp.float16)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), G, 1).reshape(B * Hq, Skv, D).astype(jnp.float16)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), G, 1).reshape(B * Hq, Skv, D).astype(jnp.float16)
+    o_ref = ref.lut_flash_attention_ref(qt, kt, vt, causal=causal,
+                                        exp_mode=exp_mode)
+    o_ref = o_ref.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), atol=2e-3)
+
+
+def test_lut_attention_accuracy_vs_f32():
+    """Paper Table 5: LUT-fp16 attention ≈ f32 attention."""
+    B, S, H, D = 2, 256, 4, 64
+    q = jax.random.normal(jax.random.fold_in(KEY, 5), (B, S, H, D)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(KEY, 6), (B, S, H, D)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(KEY, 7), (B, S, H, D)) * 0.5
+    o = ops.flash_attention(q, k, v, causal=True, exp_mode="lut")
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    o32 = ref.attention_f32_ref(qt, kt, vt, causal=True)
+    o32 = o32.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    err = float(jnp.abs(o.astype(jnp.float32) - o32).max())
+    assert err < 2e-2, err
+
+
+def test_exp_lut_table_exactness():
+    """LUT[i] must equal exp of the fp16 decoded from (0x8000 | i)."""
+    lut = build_exp_lut()
+    idx = jnp.array([0, 1, 1000, 20000, 0x7BFF], jnp.uint32)
+    bits = (idx | 0x8000).astype(jnp.uint16)
+    x = jax.lax.bitcast_convert_type(bits, jnp.float16).astype(jnp.float32)
+    want = jnp.exp(x).astype(jnp.float16)
+    got = lut[0, idx]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-3)
+    # inf/nan patterns hold 0
+    assert float(lut[0, 0x7C00]) == 0.0
+
+
+@pytest.mark.parametrize("kn", [(128, 256), (256, 512), (512, 1024)])
+def test_tile_quantize_kernel_vs_oracle(kn):
+    K, N = kn
+    w = jax.random.normal(KEY, (K, N)) * 0.2
+    ck, sk = tile_quantize(w)
+    cr, sr = ref.tile_quantize_ref(w)
+    assert (np.asarray(ck) == np.asarray(cr)).mean() > 0.999  # rounding ties
+    np.testing.assert_allclose(np.asarray(sk, np.float32),
+                               np.asarray(sr, np.float32), rtol=1e-3)

@@ -1,0 +1,65 @@
+"""End-to-end system behaviour tests (replaces placeholder)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def test_quantize_then_serve_tts(trained_tiny, tiny_cfg, tok):
+    """The paper's full pipeline: quantize weights (tile Q4 + Q8 down),
+    serve with batched Best-of-N, verify accuracy is preserved-ish."""
+    from repro.core import reward as R
+    from repro.core.best_of_n import evaluate_best_of_n
+    from repro.data import tasks as T
+    from repro.quant.qlinear import quantize_model_params
+    from repro.serving.engine import DecodeEngine
+
+    tasks = T.gen_dataset(21, 6, reasoning=False, max_terms=2)
+    qp = quantize_model_params(trained_tiny)
+    eng = DecodeEngine(qp, tiny_cfg, max_len=96, eos_id=tok.eos_id,
+                      pad_id=tok.pad_id)
+    res = evaluate_best_of_n(eng, tok, tasks, n=4, max_tokens=10,
+                             rng=jax.random.key(0), scorer=R.OracleVerifier())
+    assert 0.0 <= res["accuracy"] <= 1.0
+    assert res["decode_tokens"] > 0
+
+
+def test_dryrun_single_cell_subprocess():
+    """The multi-pod dry-run entrypoint works end to end (one fast cell on
+    the 512-device multi-pod mesh)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-130m",
+         "--shape", "decode_32k", "--multi-pod", "--out",
+         "/tmp/dryrun_test"],
+        capture_output=True, text=True, env=env, timeout=420)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.load(open("/tmp/dryrun_test/mamba2-130m__decode_32k__2x16x16.json"))
+    assert rec["n_devices"] == 512
+    assert rec["per_device"]["flops"] > 0
+
+
+def test_train_entrypoint_smoke():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "llama3.2-1b",
+         "--smoke", "--steps", "6", "--batch", "4", "--seq", "64"],
+        capture_output=True, text=True, env=env, timeout=420)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "loss" in r.stdout
+
+
+def test_serve_entrypoint_smoke():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen2.5-1.5b",
+         "--smoke", "--budget", "2", "--tasks", "2", "--max-tokens", "8"],
+        capture_output=True, text=True, env=env, timeout=420)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "accuracy" in r.stdout

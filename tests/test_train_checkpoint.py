@@ -1,0 +1,172 @@
+"""Training substrate + checkpoint/fault-tolerance tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.data.dataset import MathDataLoader, pack_documents
+from repro.data.tokenizer import ByteTokenizer
+from repro.distributed.compression import ef_quantize, make_ef_state
+from repro.distributed.fault_tolerance import (PreemptionHandler,
+                                               StragglerMonitor,
+                                               resume_or_init)
+from repro.models import api
+from repro.train.loop import make_train_step, train_loop
+from repro.train.optimizer import (AdamWConfig, adamw_update,
+                                   clip_by_global_norm, init_opt_state, lr_at)
+
+
+def test_loss_decreases(tok, tiny_cfg):
+    m = api.get_model(tiny_cfg)
+    p = m.init_params(jax.random.key(0), tiny_cfg)
+    loader = MathDataLoader(tok, batch_size=16, seq_len=64, seed=1)
+    losses = []
+    oc = AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=60)
+    step = jax.jit(make_train_step(tiny_cfg, oc, None))
+    opt = init_opt_state(p)
+    for i in range(40):
+        batch = tuple(jnp.asarray(b) for b in next(loader))
+        p, opt, metrics = step(p, opt, batch)
+        losses.append(float(metrics["loss"]))
+    loader.close()
+    assert losses[-1] < losses[0] * 0.75, (losses[0], losses[-1])
+
+
+def test_microbatch_close_to_full_batch(tok, tiny_cfg):
+    m = api.get_model(tiny_cfg)
+    p = m.init_params(jax.random.key(0), tiny_cfg)
+    loader = MathDataLoader(tok, batch_size=16, seq_len=64, seed=2)
+    batch = tuple(jnp.asarray(b) for b in next(loader))
+    loader.close()
+    oc = AdamWConfig(lr=1e-3)
+    s1 = jax.jit(make_train_step(tiny_cfg, oc, None, microbatches=1))
+    s4 = jax.jit(make_train_step(tiny_cfg, oc, None, microbatches=4))
+    p1, _, _ = s1(p, init_opt_state(p), batch)
+    p4, _, _ = s4(p, init_opt_state(p), batch)
+    diffs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), p1, p4)
+    assert max(jax.tree.leaves(diffs)) < 2e-3  # per-microbatch normalization
+
+
+def test_grad_clip_and_lr_schedule():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(jnp.linalg.norm(clipped["a"])) <= 1.0 + 1e-5
+    oc = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr_at(5, oc)) == pytest.approx(0.5)
+    assert float(lr_at(10, oc)) == pytest.approx(1.0)
+    assert float(lr_at(100, oc)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_ef_quantize_error_feedback():
+    g = {"w": jnp.array([1.0, -0.3, 0.0001, 2.0])}
+    ef = make_ef_state(g)
+    comp, ef = ef_quantize(g, ef)
+    # error feedback accumulates the residual
+    resid = jax.tree.leaves(ef)[0]
+    np.testing.assert_allclose(np.asarray(comp["w"] + resid),
+                               np.asarray(g["w"]), atol=1e-6)
+
+
+def test_checkpoint_roundtrip(tmp_path, tiny_cfg):
+    m = api.get_model(tiny_cfg)
+    p = m.init_params(jax.random.key(0), tiny_cfg)
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = {"params": p, "step": jnp.asarray(7, jnp.int32)}
+    ck.save(state, step=7)
+    abstract = jax.eval_shape(lambda: state)
+    restored, step = ck.restore(abstract)
+    assert step == 7
+    ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)), state, restored)
+    assert all(jax.tree.leaves(ok))
+
+
+def test_checkpoint_quantized_params_roundtrip(tmp_path, tiny_cfg):
+    from repro.quant.qlinear import quantize_model_params
+
+    m = api.get_model(tiny_cfg)
+    p = quantize_model_params(m.init_params(jax.random.key(0), tiny_cfg))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(p, step=1)
+    restored, _ = ck.restore(jax.eval_shape(lambda: p))
+    ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)), p, restored)
+    assert all(jax.tree.leaves(ok))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        ck.save({"x": jnp.ones((2,))}, step=s)
+    assert ck.latest_step() == 3
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path))
+    assert steps == [2, 3]
+
+
+def test_async_checkpoint(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save_async({"x": jnp.arange(8)}, step=5)
+    ck.wait()
+    restored, s = ck.restore(jax.eval_shape(lambda: {"x": jnp.arange(8)}))
+    assert s == 5
+
+
+def test_resume_or_init(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    abstract = jax.eval_shape(lambda: {"x": jnp.zeros((3,))})
+    tree, step = resume_or_init(ck, abstract, lambda: {"x": jnp.ones((3,))},
+                                log_fn=lambda *_: None)
+    assert step == 0 and float(tree["x"][0]) == 1.0
+    ck.save({"x": jnp.full((3,), 5.0)}, step=9)
+    tree, step = resume_or_init(ck, abstract, lambda: {"x": jnp.ones((3,))},
+                                log_fn=lambda *_: None)
+    assert step == 9 and float(tree["x"][0]) == 5.0
+
+
+def test_preemption_handler_runs_save():
+    saved = []
+    with PreemptionHandler(lambda: saved.append(1)) as ph:
+        ph._handler(15, None)
+    assert saved == [1] and ph.preempted
+
+
+def test_straggler_monitor_flags_outliers():
+    logs = []
+    mon = StragglerMonitor(threshold=2.0, log_fn=logs.append)
+    for _ in range(10):
+        mon.record_step(0.1)
+    mon.record_step(0.5)
+    assert mon.slow_steps == 1 and logs
+
+
+def test_pack_documents_shapes(tok):
+    t, y, m = pack_documents([("Q:1+1=?A:", "2.")], tok, seq_len=16)
+    assert t.shape == y.shape == m.shape
+    assert t.shape[1] == 16
+    # targets are 1-shifted tokens
+    np.testing.assert_array_equal(t[0, 1:], y[0, :-1])
+
+
+def test_loader_host_sharding_disjoint(tok):
+    l0 = MathDataLoader(tok, batch_size=4, seq_len=32, seed=0, host_id=0,
+                        n_hosts=2)
+    l1 = MathDataLoader(tok, batch_size=4, seq_len=32, seed=0, host_id=1,
+                        n_hosts=2)
+    b0, b1 = next(l0)[0], next(l1)[0]
+    l0.close(); l1.close()
+    assert not np.array_equal(b0, b1)
+
+
+def test_tokenizer_roundtrip(tok):
+    s = "Q:12+34=?A:46."
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_task_verify_and_extract():
+    t = [x for x in [__import__("repro.data.tasks", fromlist=["gen_task"])]][0]
+    task = t.gen_dataset(0, 1)[0]
+    assert t.verify(task, task.target)
+    assert t.extract_answer("A:42.") == 42
+    assert t.extract_answer("junk") is None
