@@ -1,5 +1,8 @@
-"""Continuous-batching server demo: submit a mixed queue of requests and
-drain it through the slot-based scheduler (the production serving shape).
+"""Continuous-batching server demo: submit a mixed queue of requests —
+including a Best-of-N group that shares one prefill via fork — and drain it
+through the slot-based scheduler (the production serving shape).  Requests
+enter and leave the fixed decode batch independently; the step metrics show
+how full the slots stayed.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -23,9 +26,27 @@ sched = ContinuousScheduler(engine, n_slots=4, prompt_len=24)
 prompts = [f"Q:{a}+{b}=?A:" for a, b in [(1, 2), (3, 4), (5, 6), (7, 8),
                                           (2, 9), (4, 4)]]
 for i, p in enumerate(prompts):
+    # mixed budgets: short and long requests churn slots at different times
     sched.submit(Request(req_id=i, prompt=jnp.asarray(tok.encode(p)),
-                         max_new_tokens=6))
+                         max_new_tokens=4 + 3 * (i % 2)))
+# a Best-of-3 TTS request: one prefill, forked into 3 slots
+sched.submit(Request(req_id=len(prompts),
+                     prompt=jnp.asarray(tok.encode("Q:6+3=?A:")),
+                     max_new_tokens=6, n_samples=3))
+
 results = sched.run(jax.random.key(0), SamplerConfig(greedy=True))
 for rid in sorted(results):
-    print(f"req {rid}: {prompts[rid]!r} -> {tok.decode(results[rid])!r}")
-print(f"drained {len(results)} requests through 4 slots")
+    if rid < len(prompts):
+        print(f"req {rid}: {prompts[rid]!r} -> {tok.decode(results[rid])!r}")
+    else:
+        outs = [tok.decode(s) for s in results[rid]]
+        print(f"req {rid} (best-of-3 'Q:6+3=?A:'): {outs!r}")
+
+m = sched.metrics.summary()
+print(f"drained {m['completed_requests']} requests "
+      f"({m['completed_samples']} samples) through {m['n_slots']} slots in "
+      f"{m['steps']} steps; occupancy={m['avg_slot_occupancy']:.2f} "
+      f"requests/s={m['requests_per_s']:.1f} "
+      f"prefills={sched.n_prefills} "
+      f"prefill_tokens={m['prefill_tokens']} "
+      f"decode_tokens={m['decode_tokens']}")

@@ -28,6 +28,19 @@ class TTSResult:
     decode_tokens: int         # total decode cost (batch-steps summed)
 
 
+def select_best(task: T.MathTask, completions, scorer, logprob_sum, n_gen):
+    """Scorer dispatch + argmax selection shared by the direct and
+    continuous serving paths.  Returns (scores, chosen, answer, correct)."""
+    if hasattr(scorer, "score_texts"):
+        scores = scorer.score_texts(task, completions)
+    else:  # LogProbScorer
+        scores = scorer.score_states(logprob_sum, n_gen)
+    chosen = int(jnp.argmax(scores))
+    ans = T.extract_answer(completions[chosen])
+    correct = (ans == task.answer) if ans is not None else False
+    return scores, chosen, ans, correct
+
+
 def best_of_n(engine: DecodeEngine, tok: ByteTokenizer, task: T.MathTask,
               *, n: int, max_tokens: int, rng, scorer,
               sc: SamplerConfig = SamplerConfig(temperature=0.8),
@@ -40,18 +53,14 @@ def best_of_n(engine: DecodeEngine, tok: ByteTokenizer, task: T.MathTask,
     state, out = engine.generate(state, max_tokens, k, sc)
     completions = [tok.decode(row) for row in out.tolist()]
 
-    if hasattr(scorer, "score_texts"):
-        scores = scorer.score_texts(task, completions)
-    else:  # LogProbScorer
-        scores = scorer.score_states(state.logprob_sum, state.n_gen)
-    chosen = int(jnp.argmax(scores))
-    ans = T.extract_answer(completions[chosen])
+    scores, chosen, ans, correct = select_best(
+        task, completions, scorer, state.logprob_sum, state.n_gen)
     return TTSResult(
         completions=completions,
         scores=scores,
         chosen=chosen,
         answer=ans,
-        correct=(ans == task.answer) if ans is not None else False,
+        correct=correct,
         decode_tokens=int(jnp.sum(state.n_gen)),
     )
 

@@ -1,16 +1,29 @@
 """Budget controller: maps a compute budget to a TTS configuration and runs
-the accuracy/cost sweep behind the paper's Pareto plots (Fig. 10)."""
+the accuracy/cost sweep behind the paper's Pareto plots (Fig. 10).
+
+Two serving paths:
+
+* the direct path (``run_method``) builds one decode batch per task —
+  prefill, fork, generate-to-completion; fine for offline evaluation;
+* the continuous path (``serve_best_of_n`` / ``sweep(continuous=True)``)
+  routes every task through one :class:`ContinuousScheduler` slot pool, so
+  all tasks' samples share the decode batch and slots refill mid-flight —
+  the production serving shape, with occupancy/requests-per-second metrics.
+"""
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import beam_search as BS
 from repro.core import best_of_n as BoN
 from repro.core import self_consistency as SC
 from repro.data import tasks as T
+from repro.serving.engine import ContinuousScheduler, Request
+from repro.serving.sampler import SamplerConfig
 
 
 @dataclasses.dataclass
@@ -38,11 +51,65 @@ def run_method(engine, tok, task, spec: TTSSpec, rng, scorer):
     raise ValueError(spec.method)
 
 
+def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
+                    max_tokens: int, rng, scorer, n_slots: int = 8,
+                    prompt_len: Optional[int] = None,
+                    sc: SamplerConfig = SamplerConfig(temperature=0.8)):
+    """Best-of-N over a task set through the continuous-batching scheduler.
+
+    Every task is one TTS request: one prefill, ``fork`` into ``n`` slots;
+    all tasks' samples share the slot pool, so the decode batch stays full
+    across task boundaries instead of draining per task.  ``prompt_len``
+    defaults to the longest prompt in the task set.  Returns the same
+    accuracy/cost row shape as ``sweep`` plus the scheduler's step metrics.
+    """
+    prompts = [jnp.asarray(tok.encode(task.prompt)) for task in tasks]
+    if prompt_len is None:
+        prompt_len = max((int(p.shape[0]) for p in prompts), default=1)
+    sched = ContinuousScheduler(engine, n_slots=n_slots,
+                                prompt_len=prompt_len)
+    for i, prompt in enumerate(prompts):
+        sched.submit(Request(req_id=i, prompt=prompt,
+                             max_new_tokens=max_tokens, n_samples=n))
+    sched.run(rng, sc)
+    correct = cost = 0
+    for i, task in enumerate(tasks):
+        samples = sorted(sched.completed[i], key=lambda s: s.sample_idx)
+        completions = [tok.decode(s.tokens) for s in samples]
+        # n_gen counts the sampled stop token, matching the direct path's
+        # decode_tokens accounting (best_of_n uses state.n_gen)
+        cost += sum(s.n_gen for s in samples)
+        _, _, _, ok = BoN.select_best(
+            task, completions, scorer,
+            jnp.array([s.logprob_sum for s in samples], jnp.float32),
+            jnp.array([s.n_gen for s in samples], jnp.int32))
+        correct += int(ok)
+    return {
+        "method": "best_of_n",
+        "budget": n,
+        "accuracy": correct / max(1, len(tasks)),
+        "decode_tokens": cost,
+        "serving": sched.metrics.summary(),
+    }
+
+
 def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
-          rng, scorer):
-    """Accuracy / decode-cost for each spec — one row per Pareto point."""
+          rng, scorer, *, continuous: bool = False, n_slots: int = 8):
+    """Accuracy / decode-cost for each spec — one row per Pareto point.
+
+    ``continuous=True`` runs Best-of-N specs through the slot-based
+    scheduler (shared decode batch across tasks); other methods fall back
+    to the direct per-task path.
+    """
     rows = []
     for spec in specs:
+        if continuous and spec.method == "best_of_n":
+            rng, k = jax.random.split(rng)
+            rows.append(serve_best_of_n(
+                engine, tok, tasks, n=spec.budget,
+                max_tokens=spec.max_tokens, rng=k, scorer=scorer,
+                n_slots=max(n_slots, spec.budget)))
+            continue
         correct = cost = 0
         for task in tasks:
             rng, k = jax.random.split(rng)

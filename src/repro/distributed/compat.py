@@ -1,0 +1,55 @@
+"""Version-compat shims for the jax API surface this repo uses.
+
+The repo targets the modern jax API (``jax.shard_map`` with ``check_vma``,
+``jax.sharding.AxisType``), but must also run on jax 0.4.x where shard_map
+still lives in ``jax.experimental`` (with ``check_rep``) and meshes have no
+axis types.  All call sites import from here instead of feature-testing jax
+themselves.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore
+except ImportError:  # jax 0.4.x: meshes have no axis types
+    AxisType = None
+
+
+def mesh_axis_types_kw(n_axes: int) -> dict:
+    """kwargs for ``jax.make_mesh`` requesting Auto axis types, or {} when
+    the installed jax predates axis types (its meshes are Auto already)."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` (jax >= 0.5); on 0.4.x a psum of ones gives the
+    same static value inside shard_map."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on modern jax and a
+    one-element list of dicts on 0.4.x — normalize to a dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:  # jax 0.4.x: experimental namespace, check_vma was called check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

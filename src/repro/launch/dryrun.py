@@ -25,6 +25,7 @@ import jax
 
 from repro.configs.base import ALL_SHAPES, SHAPES_BY_NAME
 from repro.configs.registry import ASSIGNED_ARCHS, cells, get_config
+from repro.distributed.compat import cost_analysis_dict
 from repro.distributed.sharding import ParallelContext
 from repro.launch.mesh import make_production_mesh
 
@@ -100,7 +101,7 @@ def run_cell(arch: str, shape_name: str, par: ParallelContext,
     t_compile = time.time() - t0
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     colls = parse_collectives(compiled.as_text())
 
     rec = {

@@ -35,6 +35,11 @@ def main():
     ap.add_argument("--quantize", action="store_true",
                     help="apply tile-group W4A16 quantization (paper §5.1)")
     ap.add_argument("--ckpt", default="", help="restore trained params")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve best_of_n through the slot-based "
+                         "continuous-batching scheduler")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode slots for --continuous")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -57,17 +62,29 @@ def main():
         params = quantize_model_params(params)
         print("[serve] weights quantized: tile-group Q4_0 + Q8_0 down-proj")
 
+    if args.continuous and args.method != "best_of_n":
+        print(f"[serve] WARNING: --continuous only routes best_of_n through "
+              f"the slot scheduler; {args.method} uses the direct path")
+
     engine = DecodeEngine(params, cfg, max_len=256, eos_id=tok.eos_id,
                           pad_id=tok.pad_id)
     tasks = T.gen_dataset(123, args.tasks)
     scorer = R.OracleVerifier()
     spec = TTSSpec(method=args.method, budget=args.budget,
                    max_tokens=args.max_tokens)
-    rows = sweep(engine, tok, tasks, [spec], jax.random.key(0), scorer)
+    rows = sweep(engine, tok, tasks, [spec], jax.random.key(0), scorer,
+                 continuous=args.continuous, n_slots=args.slots)
     for r in rows:
         print(f"[serve] {r['method']} budget={r['budget']} "
               f"accuracy={r['accuracy']:.3f} "
               f"decode_tokens={r['decode_tokens']}")
+        if "serving" in r:
+            s = r["serving"]
+            print(f"[serve] continuous: slots={s['n_slots']} "
+                  f"occupancy={s['avg_slot_occupancy']:.2f} "
+                  f"requests_per_s={s['requests_per_s']:.2f} "
+                  f"prefill_tokens={s['prefill_tokens']} "
+                  f"decode_tokens={s['decode_tokens']}")
 
 
 if __name__ == "__main__":

@@ -17,10 +17,22 @@ sampled from. Each step samples, feeds the token through decode_step
 (writing its KV at position cache_len), and replaces pending_logits — so no
 KV row is ever written twice and the first generated token is sampled from
 the prefill logits exactly.
+
+On top of the engine sits :class:`ContinuousScheduler`, a slot-based
+continuous-batching loop: one persistent ``GenState`` of ``n_slots`` rows
+decodes every step; each step admits queued requests into free rows
+(prefill → ``merge_rows`` scatter; TTS groups prefill once and ``fork``),
+then releases any row that sampled a stop id or exhausted its token budget.
+Requests enter and leave the batch independently mid-flight — the decode
+batch stays full under mixed-length traffic, which is what makes parallel
+test-time-scaling samples ride along for free.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import dataclasses
+import time
+from collections import deque
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Callable, Optional
 
@@ -68,6 +80,9 @@ class DecodeEngine:
                                 static_argnames=("n_steps", "sc", "stop_ids"))
         self._step_jit = jax.jit(self._step_impl,
                                  static_argnames=("sc", "stop_ids"))
+        self._merge_jit = jax.jit(self._merge_impl)
+        self._merge_donate_jit = jax.jit(self._merge_impl,
+                                         donate_argnums=(0,))
 
     # -- prefill ------------------------------------------------------------
     def _prefill_impl(self, params, tokens, lengths, embeddings=None):
@@ -93,6 +108,66 @@ class DecodeEngine:
             logprob_sum=jnp.zeros((B,), jnp.float32),
             n_gen=jnp.zeros((B,), jnp.int32),
         )
+
+    def empty_state(self, batch: int) -> GenState:
+        """An all-free decoding state of ``batch`` rows (every row done).
+
+        The continuous-batching scheduler keeps one of these alive for the
+        server's lifetime and scatters admitted requests into its rows with
+        :meth:`merge_rows`.  Done rows route their KV writes to the scratch
+        slot, so idle rows cost one wasted lane of batched compute and no
+        correctness hazards.
+        """
+        cache = self.model.init_cache(self.cfg, batch, self.max_len)
+        return GenState(
+            cache=cache,
+            cache_len=jnp.zeros((batch,), jnp.int32),
+            pending_logits=jnp.zeros((batch, self.cfg.vocab_size),
+                                     jnp.float32),
+            done=jnp.ones((batch,), bool),
+            logprob_sum=jnp.zeros((batch,), jnp.float32),
+            n_gen=jnp.zeros((batch,), jnp.int32),
+        )
+
+    # -- row scatter (continuous-batching admission) -------------------------
+    @staticmethod
+    def _merge_impl(dst: GenState, src: GenState, rows) -> GenState:
+        cache = jax.tree.map(
+            lambda d, s: d.at[:, rows].set(s.astype(d.dtype)),
+            dst.cache, src.cache)
+        return GenState(
+            cache=cache,
+            cache_len=dst.cache_len.at[rows].set(src.cache_len),
+            pending_logits=dst.pending_logits.at[rows].set(
+                src.pending_logits),
+            done=dst.done.at[rows].set(src.done),
+            logprob_sum=dst.logprob_sum.at[rows].set(src.logprob_sum),
+            n_gen=dst.n_gen.at[rows].set(src.n_gen),
+        )
+
+    def merge_rows(self, dst: GenState, src: GenState, rows: jnp.ndarray,
+                   *, donate: bool = False) -> GenState:
+        """Scatter ``src``'s batch rows into ``dst`` at indices ``rows``.
+
+        ``rows`` is (B_src,) int32; cache leaves carry batch on axis 1
+        (axis 0 is the stacked layer dim), per-sequence vectors on axis 0.
+        This is the admission primitive: prefill a new request into a small
+        B_src state, then graft its cache/logits/length rows onto the live
+        n_slots decode state without touching other rows.  Jitted so the
+        per-leaf scatters fuse into one executable (recompiles once per
+        distinct B_src).  ``donate=True`` donates ``dst``'s buffers so the
+        scatter happens in place — the scheduler hot path uses this since
+        it immediately rebinds the state; callers that still need ``dst``
+        afterwards must keep the default.
+        """
+        fn = self._merge_donate_jit if donate else self._merge_jit
+        return fn(dst, src, jnp.asarray(rows, jnp.int32))
+
+    def release_rows(self, state: GenState, rows) -> GenState:
+        """Mark ``rows`` done (slot release without a sampled stop token,
+        e.g. a request hitting its max_new_tokens budget)."""
+        rows = jnp.asarray(rows, jnp.int32)
+        return dataclasses.replace(state, done=state.done.at[rows].set(True))
 
     # -- fork / reorder (TTS batch fan-out) ----------------------------------
     def fork(self, state: GenState, n: int) -> GenState:
@@ -159,9 +234,11 @@ class DecodeEngine:
         )
         return new_state, tok
 
-    def step(self, state: GenState, rng, sc: SamplerConfig = SamplerConfig()):
+    def step(self, state: GenState, rng, sc: SamplerConfig = SamplerConfig(),
+             stop_ids: tuple = ()):
         """One decode step. Returns (new_state, sampled tokens (B,))."""
-        return self._step_jit(self.params, state, rng, sc=sc)
+        return self._step_jit(self.params, state, rng, sc=sc,
+                              stop_ids=tuple(stop_ids))
 
     def _generate_impl(self, params, state: GenState, rng, *, n_steps: int,
                        sc: SamplerConfig, stop_ids: tuple = ()):
@@ -201,27 +278,146 @@ class Request:
     req_id: int
     prompt: jnp.ndarray          # (S,) int32
     max_new_tokens: int = 64
-    out_tokens: Optional[list] = None
+    n_samples: int = 1           # >1: TTS fan-out sharing one prefill (fork)
+
+
+@dataclass
+class CompletedSample:
+    """One finished slot occupancy (one sample of one request)."""
+
+    req_id: int
+    sample_idx: int
+    tokens: list                 # generated ids, stop token excluded
+    logprob_sum: float           # cumulative sampled logprob (TTS scoring)
+    n_gen: int                   # tokens sampled incl. any stop token — the
+                                 # denominator matching logprob_sum
+    finish_reason: str           # "stop" | "length"
+    admitted_step: int           # scheduler step the slot was filled
+    first_decode_step: int       # first step this sample decoded in batch
+    finished_step: int           # step the slot was released
+
+
+@dataclass
+class _Slot:
+    """Host-side bookkeeping for one occupied decode row."""
+
+    req: Request
+    sample_idx: int
+    admitted_step: int
+    tokens: list = field(default_factory=list)
+    first_decode_step: int = -1
+
+
+@dataclass
+class StepRecord:
+    step: int
+    occupancy: int               # rows decoding this step (== tokens decoded)
+    admitted: int                # requests admitted this step
+    prefill_tokens: int          # prompt tokens prefilled this step
+
+
+class SchedulerMetrics:
+    """Step-level metrics of the continuous batching loop."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.records: list[StepRecord] = []
+        self.completed_requests = 0
+        self.completed_samples = 0
+        self.wall_s = 0.0
+
+    def record(self, rec: StepRecord):
+        self.records.append(rec)
+
+    def summary(self) -> dict:
+        steps = len(self.records)
+        decode = sum(r.occupancy for r in self.records)
+        prefill = sum(r.prefill_tokens for r in self.records)
+        occ = (decode / (steps * self.n_slots)) if steps else 0.0
+        return {
+            "steps": steps,
+            "n_slots": self.n_slots,
+            "avg_slot_occupancy": occ,
+            "decode_tokens": decode,
+            "prefill_tokens": prefill,
+            "completed_requests": self.completed_requests,
+            "completed_samples": self.completed_samples,
+            "wall_s": self.wall_s,
+            "requests_per_s": (self.completed_requests / self.wall_s
+                               if self.wall_s > 0 else 0.0),
+            "decode_tok_per_s": (decode / self.wall_s
+                                 if self.wall_s > 0 else 0.0),
+        }
 
 
 class ContinuousScheduler:
-    """Slot-based continuous batching on top of DecodeEngine.
+    """Slot-based continuous batching on top of :class:`DecodeEngine`.
 
-    Fixed decode batch of ``n_slots``; finished sequences release their slot
-    which is refilled from the queue at the next prefill opportunity.  This
-    is the engine shape a production server uses; TTS workloads submit N
-    samples of one prompt as N requests sharing a prefill via fork.
+    The scheduler owns one persistent ``GenState`` of ``n_slots`` rows that
+    decodes **every step**; requests flow through slots independently:
+
+    1. **Admit** — while free slots remain, the queue head is prefilled
+       (one prefill per request, batch 1) and its cache/logits/length rows
+       are scattered into the live state with ``DecodeEngine.merge_rows``.
+       A TTS request (``n_samples > 1``) does *one* prefill and ``fork``\\ s
+       the prefilled row into ``n_samples`` slots, so Best-of-N rides along
+       with exactly one prompt pass.
+    2. **Decode** — one batched ``DecodeEngine.step`` over all rows.  Free
+       rows are ``done`` and cost an idle lane, never a correctness hazard.
+    3. **Release** — a row that samples a stop id, or reaches its request's
+       ``max_new_tokens``, releases its slot *immediately*; the next step's
+       admission refills it while other rows keep decoding.  Nothing ever
+       waits for a whole batch to drain.
+
+    Late-arriving work therefore starts decoding as soon as any earlier
+    request finishes (true continuous admission); per-step occupancy,
+    prefill/decode token counts and requests/s are recorded in
+    ``self.metrics``.  ``step_once`` exposes the admit→decode→release cycle
+    so callers can interleave ``submit`` with a running drain.
     """
 
     def __init__(self, engine: DecodeEngine, n_slots: int = 8,
-                 prompt_len: int = 32):
+                 prompt_len: int = 32, stop_ids: tuple = ()):
         self.engine = engine
         self.n_slots = n_slots
         self.prompt_len = prompt_len
-        self.queue: list[Request] = []
-        self.active: dict[int, Request] = {}
+        self.stop_ids = tuple(stop_ids) or (engine.eos_id,)
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[_Slot]] = [None] * n_slots
+        self.state: Optional[GenState] = None   # built on first admission
+        self.step_count = 0
+        self.n_prefills = 0
+        self.completed: dict[int, list[CompletedSample]] = {}
+        self._n_samples: dict[int, int] = {}
+        self.metrics = SchedulerMetrics(n_slots)
 
+    # -- submission ----------------------------------------------------------
     def submit(self, req: Request):
+        if req.req_id in self._n_samples:
+            raise ValueError(
+                f"request id {req.req_id} already submitted to this "
+                f"scheduler (results are keyed by req_id)")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.req_id}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens}")
+        if req.n_samples > self.n_slots:
+            raise ValueError(
+                f"request {req.req_id}: n_samples={req.n_samples} exceeds "
+                f"n_slots={self.n_slots}")
+        if req.prompt.shape[0] > self.prompt_len:
+            raise ValueError(
+                f"request {req.req_id}: prompt length {req.prompt.shape[0]} "
+                f"exceeds prompt_len={self.prompt_len}")
+        # usable sequence length is max_len - 1 (the engine reserves the
+        # last slot as the done-row KV scratch position)
+        budget = int(req.prompt.shape[0]) + req.max_new_tokens
+        if budget > self.engine.max_len - 1:
+            raise ValueError(
+                f"request {req.req_id}: prompt ({req.prompt.shape[0]}) + "
+                f"max_new_tokens ({req.max_new_tokens}) = {budget} exceeds "
+                f"engine max_len - 1 = {self.engine.max_len - 1}")
+        self._n_samples[req.req_id] = max(1, req.n_samples)
         self.queue.append(req)
 
     def _pad(self, prompt):
@@ -229,31 +425,150 @@ class ContinuousScheduler:
         out = jnp.full((S,), self.engine.pad_id, jnp.int32)
         return out.at[: prompt.shape[0]].set(prompt), prompt.shape[0]
 
-    def run(self, rng, sc: SamplerConfig = SamplerConfig(), max_rounds: int = 64):
-        """Drain the queue. Returns {req_id: token list}."""
-        results = {}
-        round_ = 0
-        while (self.queue or self.active) and round_ < max_rounds:
-            round_ += 1
-            # fill free slots
-            take = min(self.n_slots - len(self.active), len(self.queue))
-            batch = [self.queue.pop(0) for _ in range(take)]
-            if not batch and not self.active:
+    # -- admission -----------------------------------------------------------
+    def _merge(self, st: GenState, rows: list):
+        if self.state is None:
+            self.state = self.engine.empty_state(self.n_slots)
+        self.state = self.engine.merge_rows(self.state, st,
+                                            jnp.array(rows, jnp.int32),
+                                            donate=True)
+
+    def _admit_plain(self, reqs: list, free: list) -> int:
+        """One batched prefill + one merge for a run of plain requests
+        (prompts share the fixed prompt_len padding)."""
+        padded = [self._pad(r.prompt) for r in reqs]
+        st = self.engine.prefill(
+            jnp.stack([t for t, _ in padded]),
+            jnp.array([ln for _, ln in padded], jnp.int32))
+        self.n_prefills += 1
+        rows = [free.pop(0) for _ in reqs]
+        self._merge(st, rows)
+        for req, r in zip(reqs, rows):
+            self.slots[r] = _Slot(req=req, sample_idx=0,
+                                  admitted_step=self.step_count)
+        return sum(ln for _, ln in padded)
+
+    def _admit_group(self, req: Request, free: list) -> int:
+        """TTS group: one batch-1 prefill forked into n_samples slots."""
+        n = req.n_samples
+        toks, length = self._pad(req.prompt)
+        st = self.engine.prefill(toks[None], jnp.array([length], jnp.int32))
+        self.n_prefills += 1
+        st = self.engine.fork(st, n)
+        rows = [free.pop(0) for _ in range(n)]
+        self._merge(st, rows)
+        for j, r in enumerate(rows):
+            self.slots[r] = _Slot(req=req, sample_idx=j,
+                                  admitted_step=self.step_count)
+        return int(length)
+
+    def _admit(self) -> tuple:
+        """Fill free slots from the queue (FIFO). Consecutive plain
+        requests admitted in the same step share one batched prefill; a
+        TTS group prefills once and forks. Returns (requests admitted,
+        prompt tokens prefilled)."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        admitted = prefill_tokens = 0
+        while self.queue and free:
+            n_head = max(1, self.queue[0].n_samples)
+            if n_head > len(free):
+                break  # FIFO: the group waits for enough free slots
+            if self.queue[0].n_samples > 1:
+                prefill_tokens += self._admit_group(self.queue.popleft(),
+                                                    free)
+                admitted += 1
+                continue
+            plain = []
+            while (self.queue and self.queue[0].n_samples <= 1
+                   and len(plain) < len(free)):
+                plain.append(self.queue.popleft())
+            prefill_tokens += self._admit_plain(plain, free)
+            admitted += len(plain)
+        return admitted, prefill_tokens
+
+    # -- release -------------------------------------------------------------
+    def _release(self, row: int, reason: str, logprob_sum: float,
+                 n_gen: int):
+        slot = self.slots[row]
+        sample = CompletedSample(
+            req_id=slot.req.req_id, sample_idx=slot.sample_idx,
+            tokens=slot.tokens, logprob_sum=logprob_sum, n_gen=n_gen,
+            finish_reason=reason, admitted_step=slot.admitted_step,
+            first_decode_step=slot.first_decode_step,
+            finished_step=self.step_count)
+        done = self.completed.setdefault(slot.req.req_id, [])
+        done.append(sample)
+        self.metrics.completed_samples += 1
+        if len(done) == max(1, slot.req.n_samples):
+            self.metrics.completed_requests += 1
+        self.slots[row] = None
+
+    # -- the admit -> decode -> release cycle --------------------------------
+    def step_once(self, rng, sc: SamplerConfig = SamplerConfig()) -> bool:
+        """One scheduler step. Returns False when idle (nothing admitted,
+        nothing decoding)."""
+        admitted, prefill_tokens = self._admit()
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if not live:
+            return False
+        for i in live:
+            if self.slots[i].first_decode_step < 0:
+                self.slots[i].first_decode_step = self.step_count
+        self.state, toks = self.engine.step(self.state, rng, sc,
+                                            stop_ids=self.stop_ids)
+        toks_h, done_h, lp_h, ng_h = jax.device_get(
+            (toks, self.state.done, self.state.logprob_sum,
+             self.state.n_gen))
+        over_budget = []
+        for i in live:
+            slot = self.slots[i]
+            if bool(done_h[i]):          # sampled a stop id this step
+                self._release(i, "stop", float(lp_h[i]), int(ng_h[i]))
+                continue
+            slot.tokens.append(int(toks_h[i]))
+            if len(slot.tokens) >= slot.req.max_new_tokens:
+                over_budget.append(i)
+                self._release(i, "length", float(lp_h[i]), int(ng_h[i]))
+        if over_budget:
+            # freeze the rows so they stop growing until a new occupant
+            # overwrites them at admission
+            self.state = self.engine.release_rows(self.state, over_budget)
+        self.metrics.record(StepRecord(
+            step=self.step_count, occupancy=len(live), admitted=admitted,
+            prefill_tokens=prefill_tokens))
+        self.step_count += 1
+        return True
+
+    # -- drain ---------------------------------------------------------------
+    def run(self, rng, sc: SamplerConfig = SamplerConfig(),
+            max_steps: int = 4096):
+        """Drain the queue.  Returns ``{req_id: tokens}`` for plain requests
+        and ``{req_id: [tokens] * n_samples}`` for TTS requests (sample
+        order).  Rich per-sample records stay in ``self.completed``.
+
+        Raises ``RuntimeError`` if ``max_steps`` elapses with work still
+        queued or decoding (finished requests remain in ``self.completed``
+        and the drain can be resumed with another ``run`` call)."""
+        t0 = time.perf_counter()
+        steps = 0
+        while steps < max_steps:
+            rng, key = jax.random.split(rng)
+            if not self.step_once(key, sc):
                 break
-            if batch:
-                toks, lens = zip(*[self._pad(r.prompt) for r in batch])
-                state = self.engine.prefill(jnp.stack(toks),
-                                            jnp.array(lens, jnp.int32))
-                steps = max(r.max_new_tokens for r in batch)
-                rng, k = jax.random.split(rng)
-                state, out = self.engine.generate(state, steps, k, sc)
-                for i, r in enumerate(batch):
-                    toks_i = out[i][: r.max_new_tokens]
-                    # trim at EOS
-                    lst = []
-                    for t in toks_i.tolist():
-                        if t == self.engine.eos_id:
-                            break
-                        lst.append(t)
-                    results[r.req_id] = lst
+            steps += 1
+        self.metrics.wall_s += time.perf_counter() - t0
+        live = sum(1 for s in self.slots if s is not None)
+        if self.queue or live:
+            raise RuntimeError(
+                f"scheduler truncated at max_steps={max_steps}: "
+                f"{len(self.queue)} queued + {live} decoding requests "
+                f"unfinished ({len(self.completed)} request ids completed; "
+                f"re-run to continue)")
+        results = {}
+        for req_id, samples in self.completed.items():
+            ordered = sorted(samples, key=lambda s: s.sample_idx)
+            if self._n_samples.get(req_id, 1) == 1:
+                results[req_id] = ordered[0].tokens
+            else:
+                results[req_id] = [s.tokens for s in ordered]
         return results

@@ -95,6 +95,113 @@ def test_scheduler_drains_queue(engine, tok):
     assert set(res) == {0, 1, 2}
 
 
+def test_reorder_after_fork_row_mapping(engine, tok):
+    """fork maps row i to rows [i*n, (i+1)*n); reorder must gather those
+    replicated rows correctly (beam-search survivor commit after fan-out)."""
+    ids, lens = tok.encode_batch(["Q:1+1=?A:", "Q:2+2=?A:"], 32)
+    st = engine.prefill(jnp.asarray(ids), jnp.asarray(lens))
+    forked = engine.fork(st, 2)  # rows: [p0, p0, p1, p1]
+    # pick one copy of prompt 1 and one of prompt 0, swapped order
+    picked = engine.reorder(forked, jnp.array([3, 0]))
+    np.testing.assert_allclose(np.asarray(picked.pending_logits[0]),
+                               np.asarray(st.pending_logits[1]))
+    np.testing.assert_allclose(np.asarray(picked.pending_logits[1]),
+                               np.asarray(st.pending_logits[0]))
+    np.testing.assert_array_equal(np.asarray(picked.cache_len),
+                                  np.asarray(st.cache_len)[[1, 0]])
+    # the gathered rows keep decoding like the originals (greedy)
+    _, out_ref = engine.generate(st, 4, jax.random.key(0),
+                                 SamplerConfig(greedy=True))
+    _, out_picked = engine.generate(picked, 4, jax.random.key(0),
+                                    SamplerConfig(greedy=True))
+    np.testing.assert_array_equal(np.asarray(out_picked),
+                                  np.asarray(out_ref)[[1, 0]])
+
+
+def test_resume_continues_from_post_stop_pending_logits(engine, tok):
+    """After a stop, pending_logits freeze at the logits that followed the
+    stop token; resume() must continue sampling from exactly those, even
+    when extra (masked) generate steps ran after the stop."""
+    dot = tok.encode(".", bos=False)[0]
+    ids, lens = tok.encode_batch(["Q:2+3=?A:"], 32)
+    st = engine.prefill(jnp.asarray(ids), jnp.asarray(lens))
+    st, _ = engine.generate(st, 20, jax.random.key(0),
+                            SamplerConfig(greedy=True),
+                            stop_ids=(engine.eos_id, dot))
+    assert bool(st.done.all())
+    frozen = np.asarray(st.pending_logits[0])
+    # run more steps while done: pending must not move
+    st2, _ = engine.generate(st, 5, jax.random.key(1),
+                             SamplerConfig(greedy=True),
+                             stop_ids=(engine.eos_id, dot))
+    np.testing.assert_array_equal(np.asarray(st2.pending_logits[0]), frozen)
+    # resume: the first token continues from the frozen logits
+    st3, out = engine.generate(engine.resume(st2), 1, jax.random.key(2),
+                               SamplerConfig(greedy=True))
+    assert int(out[0, 0]) == int(np.argmax(frozen))
+
+
+def test_multi_stop_ids_mask_generation(engine, tok):
+    """With several stop_ids, each row stops at its first occurrence of
+    *any* of them, pads afterwards, and sets done."""
+    ids, lens = tok.encode_batch(["Q:2+3=?A:", "Q:8+1=?A:"], 32)
+    st = engine.prefill(jnp.asarray(ids), jnp.asarray(lens))
+    _, free = engine.generate(st, 12, jax.random.key(0),
+                              SamplerConfig(greedy=True), stop_ids=(9999,))
+    free = np.asarray(free)
+    # choose stop ids appearing mid-stream in each row (fall back to a
+    # never-sampled id when a row has no repeated token)
+    stops = tuple({int(free[0, min(2, free.shape[1] - 1)]),
+                   int(free[1, min(3, free.shape[1] - 1)])})
+    st2, out = engine.generate(st, 12, jax.random.key(0),
+                               SamplerConfig(greedy=True), stop_ids=stops)
+    out = np.asarray(out)
+    for b in range(2):
+        hits = [i for i, t in enumerate(free[b].tolist()) if t in stops]
+        assert hits, "test setup: chosen stop id must occur in the stream"
+        first = hits[0]
+        # prefix matches the unrestricted run, stop token kept at the stop
+        # position, everything after is pad
+        np.testing.assert_array_equal(out[b, :first], free[b, :first])
+        assert out[b, first] in stops
+        assert (out[b, first + 1:] == engine.pad_id).all()
+    assert bool(np.asarray(st2.done).all())
+
+
+def test_merge_rows_scatters_into_live_state(engine, tok):
+    """merge_rows grafts a prefilled request onto arbitrary rows of a live
+    state without disturbing the other rows."""
+    base_ids, base_lens = tok.encode_batch(["Q:1+2=?A:", "Q:3+4=?A:",
+                                            "Q:5+6=?A:"], 32)
+    base = engine.prefill(jnp.asarray(base_ids), jnp.asarray(base_lens))
+    new_ids, new_lens = tok.encode_batch(["Q:7+8=?A:"], 32)
+    new = engine.prefill(jnp.asarray(new_ids), jnp.asarray(new_lens))
+    merged = engine.merge_rows(base, new, jnp.array([1]))
+    np.testing.assert_allclose(np.asarray(merged.pending_logits[1]),
+                               np.asarray(new.pending_logits[0]))
+    for row in (0, 2):
+        np.testing.assert_allclose(np.asarray(merged.pending_logits[row]),
+                                   np.asarray(base.pending_logits[row]))
+    # merged row decodes exactly like the standalone prefill (greedy)
+    _, out_merged = engine.generate(merged, 4, jax.random.key(0),
+                                    SamplerConfig(greedy=True))
+    _, out_new = engine.generate(new, 4, jax.random.key(0),
+                                 SamplerConfig(greedy=True))
+    np.testing.assert_array_equal(np.asarray(out_merged)[1],
+                                  np.asarray(out_new)[0])
+
+
+def test_empty_state_rows_stay_inert(engine):
+    """empty_state rows are done: stepping them emits pads and never
+    advances lengths (free slots are harmless idle lanes)."""
+    st = engine.empty_state(3)
+    st2, toks = engine.step(st, jax.random.key(0), SamplerConfig(greedy=True))
+    assert (np.asarray(toks) == engine.pad_id).all()
+    np.testing.assert_array_equal(np.asarray(st2.cache_len),
+                                  np.zeros(3, np.int32))
+    assert bool(np.asarray(st2.done).all())
+
+
 def test_sampler_top_k_top_p():
     logits = jnp.log(jnp.array([[0.5, 0.3, 0.15, 0.05]]))
     for _ in range(3):

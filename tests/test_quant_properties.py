@@ -1,94 +1,103 @@
-"""Hypothesis property tests for the quantization substrate invariants."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+"""Property tests for the quantization substrate invariants.
+
+Originally hypothesis-based; rewritten as seeded-random property loops so
+the suite collects and runs without optional dependencies (hypothesis is
+not in the container).  Each test draws a spread of shapes/values from a
+fixed seed and checks the same invariants over every draw.
+"""
+import itertools
+
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest
 
 from repro.quant import tile_quant as TQ
 from repro.quant.codebooks import CODEBOOKS, codebook_absmax
 
-SETTINGS = dict(max_examples=25, deadline=None)
-
-w_arrays = hnp.arrays(
-    np.float32, st.tuples(st.sampled_from([2, 4, 8]).map(lambda x: x * 16),
-                          st.sampled_from([32, 64, 128])),
-    elements=st.floats(-4, 4, width=32))
+_SHAPES = [(32, 32), (64, 64), (128, 32), (32, 128), (64, 128)]
 
 
-@given(codes=hnp.arrays(np.uint8, st.tuples(st.integers(1, 16),
-                                            st.integers(1, 32).map(lambda x: x * 2)),
-                        elements=st.integers(0, 15)))
-@settings(**SETTINGS)
-def test_pack_unpack_roundtrip(codes):
-    packed = TQ.pack_int4(jnp.asarray(codes))
-    assert packed.shape == (codes.shape[0], codes.shape[1] // 2)
-    out = np.asarray(TQ.unpack_int4(packed))
-    np.testing.assert_array_equal(out, codes)
+def _draw_weights(seed: int, n: int = 8):
+    """n random (K, N) float32 arrays in [-4, 4] over a spread of shapes."""
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        K, N = _SHAPES[i % len(_SHAPES)]
+        yield rng.uniform(-4, 4, size=(K, N)).astype(np.float32)
 
 
-@given(w=w_arrays, scheme=st.sampled_from(["tile", "common"]))
-@settings(**SETTINGS)
-def test_q4_error_bounded_by_half_grid_step(w, scheme):
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        rows = int(rng.integers(1, 17))
+        cols = int(rng.integers(1, 33)) * 2
+        codes = rng.integers(0, 16, size=(rows, cols)).astype(np.uint8)
+        packed = TQ.pack_int4(jnp.asarray(codes))
+        assert packed.shape == (rows, cols // 2)
+        out = np.asarray(TQ.unpack_int4(packed))
+        np.testing.assert_array_equal(out, codes)
+
+
+@pytest.mark.parametrize("scheme", ["tile", "common"])
+def test_q4_error_bounded_by_half_grid_step(scheme):
     """Round-to-nearest on the Q4_0 grid: |w - deq| <= scale/2 per element
     (grid spacing is 1.0 in normalized units = `scale` after rescaling)."""
-    qw = TQ.quantize(jnp.asarray(w), scheme=scheme, codebook="q4_0")
-    deq = np.asarray(TQ.dequantize(qw))
-    s = np.asarray(qw["scales"], np.float32)
-    if scheme == "common":
-        sc = np.repeat(s, 32, axis=0)
-    else:
-        sc = np.repeat(np.repeat(s, 2, axis=0), 16, axis=1)
-    err = np.abs(w - deq)
-    # the Q4_0 grid is asymmetric ([-8, 7]): +absmax rounds down a full grid
-    # step; everything else rounds within half a step; fp16 scale storage
-    # adds up to |w|·2^-10 relative rounding
-    bound = np.maximum(sc, 1e-8) * 1.0 + np.abs(w) * 2 ** -10 + 1e-4
-    assert (err <= bound).all(), float((err - bound).max())
+    for w in _draw_weights(1):
+        qw = TQ.quantize(jnp.asarray(w), scheme=scheme, codebook="q4_0")
+        deq = np.asarray(TQ.dequantize(qw))
+        s = np.asarray(qw["scales"], np.float32)
+        if scheme == "common":
+            sc = np.repeat(s, 32, axis=0)
+        else:
+            sc = np.repeat(np.repeat(s, 2, axis=0), 16, axis=1)
+        err = np.abs(w - deq)
+        # the Q4_0 grid is asymmetric ([-8, 7]): +absmax rounds down a full
+        # grid step; everything else rounds within half a step; fp16 scale
+        # storage adds up to |w|·2^-10 relative rounding
+        bound = np.maximum(sc, 1e-8) * 1.0 + np.abs(w) * 2 ** -10 + 1e-4
+        assert (err <= bound).all(), float((err - bound).max())
 
 
-@given(w=w_arrays,
-       cb=st.sampled_from(sorted(CODEBOOKS)),
-       scheme=st.sampled_from(["tile", "common"]))
-@settings(**SETTINGS)
-def test_dequantized_range_never_exceeds_group_absmax(w, cb, scheme):
+@pytest.mark.parametrize("cb,scheme",
+                         list(itertools.product(sorted(CODEBOOKS),
+                                                ["tile", "common"])))
+def test_dequantized_range_never_exceeds_group_absmax(cb, scheme):
     """|dequant| <= group absmax (up to fp16 scale rounding)."""
-    qw = TQ.quantize(jnp.asarray(w), scheme=scheme, codebook=cb)
-    deq = np.asarray(TQ.dequantize(qw))
-    assert np.abs(deq).max() <= np.abs(w).max() * 1.01 + 1e-4
+    for w in _draw_weights(2, n=4):
+        qw = TQ.quantize(jnp.asarray(w), scheme=scheme, codebook=cb)
+        deq = np.asarray(TQ.dequantize(qw))
+        assert np.abs(deq).max() <= np.abs(w).max() * 1.01 + 1e-4
 
 
-@given(w=w_arrays)
-@settings(**SETTINGS)
-def test_constant_group_is_exact(w):
+def test_constant_group_is_exact():
     """A weight constant within each (2,16) tile group quantizes exactly
     when negative (the asymmetric [-8,7] grid hits -absmax exactly; +absmax
     is one step off — same as llama.cpp Q4_0)."""
-    K, N = w.shape
-    wc = -np.abs(np.repeat(np.repeat(w[::2, ::16], 2, axis=0), 16,
-                           axis=1)[:K, :N])
-    qw = TQ.quantize(jnp.asarray(wc), scheme="tile", codebook="q4_0")
-    deq = np.asarray(TQ.dequantize(qw))
-    np.testing.assert_allclose(deq, wc, atol=2e-3, rtol=2e-3)
+    for w in _draw_weights(3):
+        K, N = w.shape
+        wc = -np.abs(np.repeat(np.repeat(w[::2, ::16], 2, axis=0), 16,
+                               axis=1)[:K, :N])
+        qw = TQ.quantize(jnp.asarray(wc), scheme="tile", codebook="q4_0")
+        deq = np.asarray(TQ.dequantize(qw))
+        np.testing.assert_allclose(deq, wc, atol=2e-3, rtol=2e-3)
 
 
-@given(w=w_arrays)
-@settings(**SETTINGS)
-def test_q8_roundtrip_tight(w):
-    qw = TQ.quantize_q8(jnp.asarray(w))
-    deq = np.asarray(TQ.dequantize_q8(qw))
-    s = np.repeat(np.asarray(qw["scales"], np.float32), 32, axis=0)
-    assert (np.abs(w - deq) <= np.maximum(s, 1e-8) * 0.5 + 1e-4).all()
+def test_q8_roundtrip_tight():
+    for w in _draw_weights(4):
+        qw = TQ.quantize_q8(jnp.asarray(w))
+        deq = np.asarray(TQ.dequantize_q8(qw))
+        s = np.repeat(np.asarray(qw["scales"], np.float32), 32, axis=0)
+        assert (np.abs(w - deq) <= np.maximum(s, 1e-8) * 0.5 + 1e-4).all()
 
 
-@given(w=w_arrays, scheme=st.sampled_from(["tile", "common"]))
-@settings(**SETTINGS)
-def test_sign_symmetry(w, scheme):
+@pytest.mark.parametrize("scheme", ["tile", "common"])
+def test_sign_symmetry(scheme):
     """quantize(-w) dequantizes to -dequantize(w) for a sign-symmetric
     codebook (FP4 E2M1 is ±symmetric; NF4/Q4_0 are deliberately not)."""
-    q1 = np.asarray(TQ.dequantize(TQ.quantize(jnp.asarray(w), scheme=scheme,
-                                              codebook="fp4")))
-    q2 = np.asarray(TQ.dequantize(TQ.quantize(jnp.asarray(-w), scheme=scheme,
-                                              codebook="fp4")))
-    np.testing.assert_allclose(q1, -q2, atol=2e-2)
+    for w in _draw_weights(5):
+        q1 = np.asarray(TQ.dequantize(TQ.quantize(jnp.asarray(w),
+                                                  scheme=scheme,
+                                                  codebook="fp4")))
+        q2 = np.asarray(TQ.dequantize(TQ.quantize(jnp.asarray(-w),
+                                                  scheme=scheme,
+                                                  codebook="fp4")))
+        np.testing.assert_allclose(q1, -q2, atol=2e-2)

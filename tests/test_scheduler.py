@@ -1,0 +1,227 @@
+"""Continuous-batching scheduler tests: continuous admission, slot-reuse
+correctness against per-request generate, fork-shared TTS admission, and
+step-level metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import reward as R
+from repro.core.controller import TTSSpec, serve_best_of_n, sweep
+from repro.data import tasks as T
+from repro.serving.engine import ContinuousScheduler, DecodeEngine, Request
+from repro.serving.sampler import SamplerConfig
+
+# a token id no sampler can produce (vocab 320): requests run to their
+# max_new_tokens budget, making slot-lifecycle timing deterministic
+NO_STOP = (9999,)
+GREEDY = SamplerConfig(greedy=True)
+
+
+@pytest.fixture(scope="module")
+def engine(trained_tiny, tiny_cfg, tok):
+    return DecodeEngine(trained_tiny, tiny_cfg, max_len=128,
+                        eos_id=tok.eos_id, pad_id=tok.pad_id)
+
+
+def _req(tok, rid, text, max_new, n_samples=1):
+    return Request(req_id=rid, prompt=jnp.asarray(tok.encode(text)),
+                   max_new_tokens=max_new, n_samples=n_samples)
+
+
+def _reference_tokens(engine, tok, text, max_new, prompt_len=16):
+    """Per-request greedy DecodeEngine run with the scheduler's padding."""
+    ids = tok.encode(text)
+    padded = jnp.full((prompt_len,), engine.pad_id, jnp.int32)
+    padded = padded.at[: len(ids)].set(jnp.asarray(ids))
+    st = engine.prefill(padded[None], jnp.array([len(ids)], jnp.int32))
+    _, out = engine.generate(st, max_new, jax.random.key(0), GREEDY,
+                             stop_ids=NO_STOP)
+    return out[0].tolist()
+
+
+def test_late_request_admitted_before_long_request_finishes(engine, tok):
+    """True continuous admission: a request submitted *after* decoding has
+    started lands in a freed slot and finishes while an earlier long
+    request is still decoding."""
+    sched = ContinuousScheduler(engine, n_slots=2, prompt_len=16,
+                                stop_ids=NO_STOP)
+    sched.submit(_req(tok, 0, "Q:7+5=?A:", max_new=20))   # long
+    sched.submit(_req(tok, 1, "Q:1+1=?A:", max_new=2))    # short
+    rng = jax.random.key(0)
+    for _ in range(3):  # short request finishes at step 2
+        rng, k = jax.random.split(rng)
+        assert sched.step_once(k, GREEDY)
+    assert 1 in sched.completed and 0 not in sched.completed
+    sched.submit(_req(tok, 2, "Q:2+2=?A:", max_new=3))    # late arrival
+    sched.run(rng, GREEDY)
+
+    late = sched.completed[2][0]
+    long_ = sched.completed[0][0]
+    # the late request started decoding — and finished — while the long
+    # request was still occupying its slot
+    assert late.first_decode_step < long_.finished_step
+    assert late.finished_step < long_.finished_step
+    # it really decoded alongside the long request (occupancy 2 that step)
+    rec = sched.metrics.records[late.first_decode_step]
+    assert rec.occupancy == 2
+
+
+def test_queued_request_fills_freed_slot_mid_drain(engine, tok):
+    """With 2 slots and 3 requests, the 3rd (queued at submit time) starts
+    decoding in the short request's freed slot before the long one ends."""
+    sched = ContinuousScheduler(engine, n_slots=2, prompt_len=16,
+                                stop_ids=NO_STOP)
+    sched.submit(_req(tok, 0, "Q:8+4=?A:", max_new=16))
+    sched.submit(_req(tok, 1, "Q:1+2=?A:", max_new=2))
+    sched.submit(_req(tok, 2, "Q:3+3=?A:", max_new=3))
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert set(res) == {0, 1, 2}
+    assert (sched.completed[2][0].first_decode_step
+            < sched.completed[0][0].finished_step)
+
+
+def test_slot_reuse_matches_per_request_generate(engine, tok):
+    """Token streams through churned slots equal standalone greedy
+    DecodeEngine.generate runs — slot reuse never leaks state."""
+    sched = ContinuousScheduler(engine, n_slots=2, prompt_len=16,
+                                stop_ids=NO_STOP)
+    reqs = [("Q:2+7=?A:", 7), ("Q:1+1=?A:", 2), ("Q:9+9=?A:", 5),
+            ("Q:4+5=?A:", 3), ("Q:8+2=?A:", 6)]
+    for i, (text, max_new) in enumerate(reqs):
+        sched.submit(_req(tok, i, text, max_new))
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert set(res) == set(range(len(reqs)))
+    for i, (text, max_new) in enumerate(reqs):
+        ref = _reference_tokens(engine, tok, text, max_new)
+        assert res[i] == ref, f"req {i}: {res[i]} != {ref}"
+
+
+def test_tts_group_prefills_once_and_forks(engine, tok):
+    """N samples of one prompt = exactly one prefill; greedy fork produces
+    identical streams matching the plain request's stream."""
+    sched = ContinuousScheduler(engine, n_slots=4, prompt_len=16,
+                                stop_ids=NO_STOP)
+    sched.submit(_req(tok, 0, "Q:5+4=?A:", max_new=5, n_samples=4))
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert sched.n_prefills == 1
+    assert len(res[0]) == 4
+    ref = _reference_tokens(engine, tok, "Q:5+4=?A:", 5)
+    for stream in res[0]:
+        assert stream == ref
+
+
+def test_tts_group_waits_for_enough_slots(engine, tok):
+    """A Best-of-4 group behind a single in 2 free slots waits (FIFO) but
+    eventually runs; groups larger than n_slots are rejected at submit."""
+    sched = ContinuousScheduler(engine, n_slots=4, prompt_len=16,
+                                stop_ids=NO_STOP)
+    sched.submit(_req(tok, 0, "Q:1+5=?A:", max_new=6))
+    sched.submit(_req(tok, 1, "Q:2+5=?A:", max_new=6))
+    sched.submit(_req(tok, 2, "Q:3+5=?A:", max_new=4, n_samples=4))
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert set(res) == {0, 1, 2} and len(res[2]) == 4
+    with pytest.raises(ValueError):
+        sched.submit(_req(tok, 9, "Q:0+0=?A:", max_new=2, n_samples=5))
+
+
+def test_submit_rejects_over_budget_and_run_reports_truncation(engine, tok):
+    """A request whose prompt + max_new_tokens would spill into the KV
+    scratch slot is rejected at submit; a drain that hits max_steps raises
+    instead of silently returning partial results."""
+    sched = ContinuousScheduler(engine, n_slots=2, prompt_len=16,
+                                stop_ids=NO_STOP)
+    with pytest.raises(ValueError):  # engine.max_len == 128
+        sched.submit(_req(tok, 0, "Q:1+1=?A:", max_new=128))
+    with pytest.raises(ValueError):  # zero-token requests are rejected
+        sched.submit(_req(tok, 7, "Q:1+1=?A:", max_new=0))
+    sched.submit(_req(tok, 1, "Q:1+1=?A:", max_new=10))
+    with pytest.raises(ValueError):  # req_id reuse would corrupt results
+        sched.submit(_req(tok, 1, "Q:2+2=?A:", max_new=4))
+    with pytest.raises(RuntimeError):
+        sched.run(jax.random.key(0), GREEDY, max_steps=3)
+    # the drain is resumable: finishing it yields the full stream
+    res = sched.run(jax.random.key(1), GREEDY)
+    assert len(res[1]) == 10
+
+
+def test_same_step_plain_admissions_share_one_prefill(engine, tok):
+    """Plain requests admitted in the same step are batched into a single
+    prefill; trickle-in admissions prefill separately."""
+    sched = ContinuousScheduler(engine, n_slots=4, prompt_len=16,
+                                stop_ids=NO_STOP)
+    for i in range(4):
+        sched.submit(_req(tok, i, f"Q:{i}+2=?A:", max_new=2 + i))
+    sched.submit(_req(tok, 9, "Q:9+9=?A:", max_new=2))
+    res = sched.run(jax.random.key(0), GREEDY)
+    # step 0 admits reqs 0-3 as one batch; req 9 lands alone in a freed slot
+    assert sched.n_prefills == 2
+    assert set(res) == {0, 1, 2, 3, 9}
+    for i in range(4):
+        assert res[i] == _reference_tokens(engine, tok, f"Q:{i}+2=?A:", 2 + i)
+
+
+def test_eos_releases_slot_and_is_excluded(engine, tok):
+    """Default stop (EOS): a trained row that emits EOS releases its slot
+    with finish_reason 'stop' and the stop token is excluded."""
+    sched = ContinuousScheduler(engine, n_slots=2, prompt_len=16)
+    sched.submit(_req(tok, 0, "Q:3+4=?A:", max_new=30))
+    res = sched.run(jax.random.key(0), GREEDY)
+    sample = sched.completed[0][0]
+    assert tok.eos_id not in res[0]
+    if sample.finish_reason == "stop":
+        assert len(res[0]) < 30
+
+
+def test_metrics_track_occupancy_and_throughput(engine, tok):
+    sched = ContinuousScheduler(engine, n_slots=2, prompt_len=16,
+                                stop_ids=NO_STOP)
+    for i in range(3):
+        sched.submit(_req(tok, i, f"Q:{i}+1=?A:", max_new=3))
+    sched.run(jax.random.key(0), GREEDY)
+    s = sched.metrics.summary()
+    assert s["completed_requests"] == 3
+    assert s["decode_tokens"] == sum(r.occupancy for r in
+                                     sched.metrics.records)
+    assert 0.0 < s["avg_slot_occupancy"] <= 1.0
+    assert s["requests_per_s"] > 0
+    assert s["prefill_tokens"] > 0
+    # per-step decode never exceeds the slot count
+    assert all(r.occupancy <= 2 for r in sched.metrics.records)
+
+
+def test_scheduler_drains_interleaved_queue(engine, tok):
+    """Seed regression: a queue larger than n_slots fully drains."""
+    sched = ContinuousScheduler(engine, n_slots=2, prompt_len=16)
+    for i in range(3):
+        sched.submit(_req(tok, i, f"Q:{i}+1=?A:", max_new=4))
+    res = sched.run(jax.random.key(0))
+    assert set(res) == {0, 1, 2}
+
+
+def test_controller_continuous_best_of_n(engine, tok):
+    """Best-of-N sweeps run through the scheduler and report serving
+    metrics alongside accuracy."""
+    tasks = T.gen_dataset(41, 4, reasoning=False, max_terms=2)
+    row = serve_best_of_n(engine, tok, tasks, n=4, max_tokens=10,
+                          rng=jax.random.key(0), scorer=R.OracleVerifier(),
+                          n_slots=8)
+    assert 0.0 <= row["accuracy"] <= 1.0
+    assert row["decode_tokens"] > 0
+    assert row["serving"]["completed_requests"] == 4
+    assert row["serving"]["avg_slot_occupancy"] > 0
+
+    rows = sweep(engine, tok, tasks,
+                 [TTSSpec(method="best_of_n", budget=2, max_tokens=8)],
+                 jax.random.key(1), R.OracleVerifier(), continuous=True)
+    assert "serving" in rows[0]
+    assert 0.0 <= rows[0]["accuracy"] <= 1.0
+
+
+def test_logprob_scorer_through_scheduler(engine, tok):
+    """The LogProbScorer path scores from per-slot decode statistics."""
+    tasks = T.gen_dataset(43, 2, reasoning=False, max_terms=2)
+    row = serve_best_of_n(engine, tok, tasks, n=2, max_tokens=8,
+                          rng=jax.random.key(0), scorer=R.LogProbScorer(),
+                          n_slots=4)
+    assert 0.0 <= row["accuracy"] <= 1.0
