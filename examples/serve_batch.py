@@ -4,8 +4,16 @@ through the slot-based scheduler (the production serving shape).  Requests
 enter and leave the fixed decode batch independently; the step metrics show
 how full the slots stayed.
 
-    PYTHONPATH=src python examples/serve_batch.py
+The decode slots are backed by the *paged* KV pool: each slot holds block
+ids instead of a dense max_len cache row, the Best-of-3 group's samples
+share the prompt's blocks (fork = refcount bump, split lazily by
+copy-on-write), and the pool stats printed at the end show the peak KV
+footprint vs the dense reservation.  Pass --dense to compare layouts.
+
+    PYTHONPATH=src python examples/serve_batch.py [--dense]
 """
+import sys
+
 import jax
 import jax.numpy as jnp
 
@@ -13,14 +21,18 @@ from repro.configs.registry import get_config
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import api
 from repro.serving.engine import ContinuousScheduler, DecodeEngine, Request
+from repro.serving.kv_pool import dense_kv_bytes
 from repro.serving.sampler import SamplerConfig
 
+PAGED = "--dense" not in sys.argv[1:]
 tok = ByteTokenizer()
 cfg = get_config("qwen2.5-1.5b", smoke=True).with_(vocab_size=tok.vocab_size)
 model = api.get_model(cfg)
 params = model.init_params(jax.random.key(0), cfg)
+kv_kwargs = (dict(paged=True, block_size=8, n_blocks=49)  # 4 slots' worth
+             if PAGED else {})
 engine = DecodeEngine(params, cfg, max_len=96, eos_id=tok.eos_id,
-                      pad_id=tok.pad_id)
+                      pad_id=tok.pad_id, **kv_kwargs)
 sched = ContinuousScheduler(engine, n_slots=4, prompt_len=24)
 
 prompts = [f"Q:{a}+{b}=?A:" for a, b in [(1, 2), (3, 4), (5, 6), (7, 8),
@@ -50,3 +62,12 @@ print(f"drained {m['completed_requests']} requests "
       f"prefills={sched.n_prefills} "
       f"prefill_tokens={m['prefill_tokens']} "
       f"decode_tokens={m['decode_tokens']}")
+if PAGED:
+    kv = engine.pool.stats()
+    dense = dense_kv_bytes(cfg, 4, engine.max_len)
+    print(f"paged kv: block_size={kv['block_size']} "
+          f"peak_blocks={kv['peak_blocks_in_use']} "
+          f"cow_copies={kv['cow_copies']} leaked={kv['blocks_in_use']} "
+          f"peak_bytes={kv['peak_bytes_in_use']} vs dense {dense} "
+          f"({(1 - kv['peak_bytes_in_use'] / dense) * 100:.0f}% saved "
+          f"with a right-sized pool)")

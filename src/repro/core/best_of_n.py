@@ -51,6 +51,10 @@ def best_of_n(engine: DecodeEngine, tok: ByteTokenizer, task: T.MathTask,
     state = engine.fork(state, n)
     rng, k = jax.random.split(rng)
     state, out = engine.generate(state, max_tokens, k, sc)
+    if engine.paged:
+        # return the task's KV blocks to the pool (the direct path builds
+        # one throwaway state per task; paged blocks must be freed by hand)
+        engine.release_rows(state, list(range(n)))
     completions = [tok.decode(row) for row in out.tolist()]
 
     scores, chosen, ans, correct = select_best(

@@ -68,10 +68,27 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
         prompt_len = max((int(p.shape[0]) for p in prompts), default=1)
     sched = ContinuousScheduler(engine, n_slots=n_slots,
                                 prompt_len=prompt_len)
+    # the pool's peak/CoW counters are lifetime values on a shared engine;
+    # rebase them so this row reports its own interval, not the sweep's
+    cow_base = engine.pool.reset_peak() if engine.paged else 0
     for i, prompt in enumerate(prompts):
         sched.submit(Request(req_id=i, prompt=prompt,
                              max_new_tokens=max_tokens, n_samples=n))
     sched.run(rng, sc)
+    serving = sched.metrics.summary()
+    if engine.paged:
+        # paged-KV accounting: hbm_saved_bytes = dense reservation minus
+        # the *logical* peak block usage, i.e. what a pool right-sized to
+        # this workload saves (this run's pool itself physically backs
+        # pool_reserved_bytes regardless of use)
+        from repro.serving.kv_pool import dense_kv_bytes
+
+        serving["kv"] = engine.pool.stats()
+        serving["kv"]["cow_copies"] -= cow_base
+        serving["kv"]["dense_bytes"] = dense_kv_bytes(
+            engine.cfg, n_slots, engine.max_len)
+        serving["kv"]["hbm_saved_bytes"] = (
+            serving["kv"]["dense_bytes"] - serving["kv"]["peak_bytes_in_use"])
     correct = cost = 0
     for i, task in enumerate(tasks):
         samples = sorted(sched.completed[i], key=lambda s: s.sample_idx)
@@ -89,7 +106,7 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
         "budget": n,
         "accuracy": correct / max(1, len(tasks)),
         "decode_tokens": cost,
-        "serving": sched.metrics.summary(),
+        "serving": serving,
     }
 
 

@@ -22,6 +22,8 @@ def self_consistency(engine: DecodeEngine, tok: ByteTokenizer,
     state = engine.fork(state, n)
     rng, k = jax.random.split(rng)
     state, out = engine.generate(state, max_tokens, k, sc)
+    if engine.paged:
+        engine.release_rows(state, list(range(n)))
     completions = [tok.decode(row) for row in out.tolist()]
     answers = [T.extract_answer(c) for c in completions]
     votes = Counter(a for a in answers if a is not None)

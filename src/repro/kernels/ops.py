@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import lut_dequant_gemm as _gemm
 from repro.kernels import lut_softmax_attention as _attn
+from repro.kernels import paged_attention as _paged
 from repro.kernels import tile_quantize as _tq
 from repro.quant import tile_quant as TQ
 
@@ -80,6 +81,25 @@ def flash_attention(q, k, v, *, causal: bool = True, exp_mode: str = "lut",
         bq=_pick_block(Sq, bq), bkv=_pick_block(Skv, bkv),
         interpret=INTERPRET, exp_mode=exp_mode)
     return o.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def paged_flash_decode(q, k_pool, v_pool, table, cache_len, *,
+                       window: int = 0, softcap: float = 0.0):
+    """Paged decode attention through the block-table-walking kernel.
+
+    q: (B, 1, Hq, D); pools: (n_blocks, bs, Hkv, D); table: (B, W) int32;
+    cache_len: (B,) int32 including the current token.  Returns
+    (B, 1, Hq, D) in q.dtype — drop-in for ``layers.paged_decode_attention``
+    (the XLA gather fallback) on the TPU hot path.
+    """
+    B, _, Hq, D = q.shape
+    Hkv = k_pool.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    o = _paged.paged_attention(qg, k_pool, v_pool, table, cache_len,
+                               window=window, softcap=softcap,
+                               interpret=INTERPRET)
+    return o.reshape(B, 1, Hq, D)
 
 
 def tile_quantize_op(w, *, group_size: int = 32):

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: gather-based paged decode attention.
+
+One query token per sequence attends against a *paged* KV cache: KV bytes
+live in a shared block pool ``(n_blocks, bs, Hkv, D)`` and each sequence
+maps logical positions to pool blocks through a block table (block ``w``
+of a row holds positions ``[w·bs, (w+1)·bs)``).
+
+The block table and the per-row lengths ride in as **scalar-prefetch**
+arguments (``pltpu.PrefetchScalarGridSpec``): the grid walks
+``(B, Hkv, W)`` with the block index innermost, and the K/V BlockSpec
+index maps dereference ``table[b, j]`` so the DMA engine fetches exactly
+the row's j-th block — no (B, W·bs, …) gather is ever materialized, which
+is the point: HBM traffic per step is the *live* KV, not the ``max_len``
+reservation.  Table padding points at the reserved scratch block 0; its
+contents are masked out via ``lengths`` like any past-the-end position.
+
+Online-softmax accumulation (m/l/acc in VMEM scratch) is plain FP32 — the
+paged kernel is about the memory layout; the LUT-exp FP16 variant lives in
+``lut_softmax_attention``.  The identical-semantics XLA fallback used on
+CPU is ``repro.models.layers.paged_decode_attention``; the pure-jnp oracle
+is ``repro.kernels.ref.paged_decode_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, n_blk: int, block_size: int,
+            scale: float, window: int, softcap: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                  # (G, D)
+    k = k_ref[0, :, 0]                               # (bs, D)
+    v = v_ref[0, :, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    seq_len = len_ref[b]
+    q_pos = seq_len - 1
+    kv_pos = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)                       # (G, bs)
+    valid = kv_pos < seq_len
+    if window > 0:
+        valid &= q_pos - kv_pos < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p, v.astype(jnp.float32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blk - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap",
+                                             "interpret"))
+def paged_attention(q, k_pool, v_pool, table, lengths, *, window: int = 0,
+                    softcap: float = 0.0, interpret: bool = True):
+    """q: (B, Hkv, G, D); pools: (n_blocks, bs, Hkv, D); table: (B, W)
+    int32 block ids (padding = scratch block 0); lengths: (B,) int32
+    including the current token.  Returns (B, Hkv, G, D) in q.dtype.
+    """
+    B, Hkv, G, D = q.shape
+    _, bs, _, _ = k_pool.shape
+    W = table.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    kern = functools.partial(_kernel, n_blk=W, block_size=bs, scale=scale,
+                             window=window, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, W),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)

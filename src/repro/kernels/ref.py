@@ -77,6 +77,33 @@ def lut_flash_attention_ref(q, k, v, lut=None, *, causal: bool = True,
     return (acc / jnp.maximum(l, 1e-30)).astype(jnp.float16)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, table, lengths, *,
+                               window: int = 0, softcap: float = 0.0):
+    """Oracle for paged_attention: materialize the block-table gather and
+    run plain masked f32 softmax attention.
+
+    q: (B, Hkv, G, D); pools: (n_blocks, bs, Hkv, D); table: (B, W) int32
+    (block w of a row holds positions [w*bs, (w+1)*bs)); lengths: (B,)
+    int32 including the current token.  Returns (B, Hkv, G, D).
+    """
+    B, Hkv, G, D = q.shape
+    bs = k_pool.shape[1]
+    W = table.shape[1]
+    k_seq = k_pool[table].reshape(B, W * bs, Hkv, D)  # (B, S, Hkv, D)
+    v_seq = v_pool[table].reshape(B, W * bs, Hkv, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", q.astype(jnp.float32),
+                   k_seq.astype(jnp.float32)) / math.sqrt(D)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kv_pos = jnp.arange(W * bs)[None]                 # (1, S)
+    valid = kv_pos < lengths[:, None]
+    if window > 0:
+        valid &= (lengths[:, None] - 1) - kv_pos < window
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgk,bkhd->bhgd", p, v_seq.astype(jnp.float32))
+
+
 def attention_f32_ref(q, k, v, *, causal: bool = True):
     """Conventional F32 attention (the paper's Table-5 baseline)."""
     BH, Sq, D = q.shape

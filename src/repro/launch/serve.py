@@ -40,6 +40,15 @@ def main():
                          "continuous-batching scheduler")
     ap.add_argument("--slots", type=int, default=8,
                     help="decode slots for --continuous")
+    ap.add_argument("--paged", action="store_true",
+                    help="back the decode slots with the paged KV block "
+                         "pool (copy-on-write prompt sharing) instead of "
+                         "dense per-slot max_len caches")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV block size in tokens for --paged")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="pool size in blocks for --paged (0 = auto: one "
+                         "dense-equivalent reservation per slot)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -65,9 +74,27 @@ def main():
     if args.continuous and args.method != "best_of_n":
         print(f"[serve] WARNING: --continuous only routes best_of_n through "
               f"the slot scheduler; {args.method} uses the direct path")
+    if args.paged and args.method == "beam_search":
+        print("[serve] WARNING: --paged with beam_search leaks pool blocks "
+              "across tasks (beam states are not auto-released); prefer "
+              "best_of_n or self_consistency")
 
-    engine = DecodeEngine(params, cfg, max_len=256, eos_id=tok.eos_id,
-                          pad_id=tok.pad_id)
+    max_len = 256
+    kv_kwargs = {}
+    if args.paged:
+        if max_len % args.block_size:
+            raise SystemExit(f"--block-size must divide max_len={max_len}")
+        # auto-size for the wider of the slot pool and the TTS fan-out:
+        # the direct (non-continuous) path forks `budget` rows at once and
+        # has no preemption to fall back on, and sweep() itself grows the
+        # scheduler to max(slots, budget) slots
+        rows = max(args.slots, args.budget)
+        n_blocks = args.kv_blocks or (
+            1 + rows * (max_len // args.block_size))
+        kv_kwargs = dict(paged=True, block_size=args.block_size,
+                         n_blocks=n_blocks)
+    engine = DecodeEngine(params, cfg, max_len=max_len, eos_id=tok.eos_id,
+                          pad_id=tok.pad_id, **kv_kwargs)
     tasks = T.gen_dataset(123, args.tasks)
     scorer = R.OracleVerifier()
     spec = TTSSpec(method=args.method, budget=args.budget,
@@ -84,7 +111,16 @@ def main():
                   f"occupancy={s['avg_slot_occupancy']:.2f} "
                   f"requests_per_s={s['requests_per_s']:.2f} "
                   f"prefill_tokens={s['prefill_tokens']} "
-                  f"decode_tokens={s['decode_tokens']}")
+                  f"decode_tokens={s['decode_tokens']} "
+                  f"preemptions={s['preemptions']}")
+            if "kv" in s:
+                kv = s["kv"]
+                print(f"[serve] paged kv: block_size={kv['block_size']} "
+                      f"peak_blocks={kv['peak_blocks_in_use']} "
+                      f"cow_copies={kv['cow_copies']} "
+                      f"peak_bytes={kv['peak_bytes_in_use']} "
+                      f"dense_bytes={kv['dense_bytes']} "
+                      f"hbm_saved_rightsized={kv['hbm_saved_bytes']}")
 
 
 if __name__ == "__main__":

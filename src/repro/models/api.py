@@ -9,6 +9,12 @@ Every family module exposes:
   decode_step(params, tokens, cache, cache_len, cfg, par)
       -> (logits, new_cache)
   init_cache(cfg, batch, max_len) / abstract_cache(...)
+
+The transformer family additionally supports a *paged* cache layout:
+``prefill(..., paged={"k", "v", "table"})`` scatters prompt KV into a
+block pool and ``decode_step`` routes through per-row block tables when
+the cache dict carries a ``"table"`` leaf (``init_paged_cache`` builds the
+pool storage; see ``repro.serving.kv_pool`` for the allocator).
 """
 from __future__ import annotations
 

@@ -286,6 +286,38 @@ def decode_attention(
     return o.reshape(B, 1, Hq, D).astype(q.dtype)
 
 
+def paged_decode_attention(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    *,
+    table: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Single-step attention against a paged (block-pooled) KV cache.
+
+    q: (B, 1, Hq, D); pools: (n_blocks, bs, Hkv, D); table: (B, W) int32
+    block ids, position-ordered (block w of a row holds positions
+    [w*bs, (w+1)*bs)); cache_len: (B,) int32 including the current token.
+
+    XLA path: gather the row's blocks into a contiguous (B, W*bs, Hkv, D)
+    view and reuse :func:`decode_attention` — padding entries point at the
+    scratch block and land beyond ``cache_len``, so the standard length
+    mask hides them.  The Pallas kernel (`repro.kernels.paged_attention`)
+    walks the table via scalar prefetch instead of materializing the
+    gather; this is the identical-semantics XLA fallback.
+    """
+    B = q.shape[0]
+    W = table.shape[1]
+    bs = k_pool.shape[1]
+    k_seq = k_pool[table].reshape(B, W * bs, *k_pool.shape[2:])
+    v_seq = v_pool[table].reshape(B, W * bs, *v_pool.shape[2:])
+    return decode_attention(q, k_seq, v_seq, cache_len=cache_len,
+                            window=window, softcap=softcap)
+
+
 def decode_attention_partial(q, k_cache, v_cache, *, valid, softcap=0.0):
     """Per-shard partial decode attention for sequence-parallel KV.
 
@@ -345,6 +377,10 @@ def attention_block(
     - training/prefill: cache is None, chunked attention over x itself.
     - decode: cache = {"k","v"} (B, S, Hkv, D); writes current K/V at
       cache_len-1 then attends (batch-sharded layout).
+    - paged decode: cache additionally holds "table" (B, W) int32 and the
+      k/v leaves are block pools (n_blocks, bs, Hkv, D); the current K/V
+      is scattered into (table[b, (cache_len-1)//bs], (cache_len-1)%bs)
+      and attention gathers through the table.
     - cross attention (whisper decoder): cross_kv = (k, v) precomputed.
     """
     B, S, _ = x.shape
@@ -377,6 +413,29 @@ def attention_block(
             causal=causal, window=window, softcap=cfg.logit_softcap,
         )
         new_kv = (k, v)
+    elif "table" in cache:
+        # paged decode: route the write through the block table.  A done
+        # row arrives with cache_len == max_len == W*bs; its write lands at
+        # the last table slot's final offset — either the scratch block
+        # (table padding) or a position >= the row's usable length, never
+        # attended either way (the paged analogue of the dense scratch
+        # slot).
+        table = cache["table"]
+        bs = cache["k"].shape[1]
+        idx = cache_len - 1  # (B,)
+        b_idx = jnp.arange(B)
+        blk = table[b_idx, idx // bs]
+        off = idx % bs
+
+        def upd(pool, new_row):
+            return pool.at[blk, off].set(new_row[:, 0].astype(pool.dtype))
+
+        ck = upd(cache["k"], k)
+        cv = upd(cache["v"], v)
+        o = paged_decode_attention(q, ck, cv, table=table,
+                                   cache_len=cache_len, window=window,
+                                   softcap=cfg.logit_softcap)
+        new_kv = (ck, cv)
     else:
         # decode: scatter K/V of the current token into the cache
         ring = getattr(cfg, "ring_cache", False)

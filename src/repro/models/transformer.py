@@ -155,19 +155,61 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> di
             "v": jax.ShapeDtypeStruct(shape, dtype)}
 
 
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     dtype=None) -> dict:
+    """Block-pool KV storage: (L, n_blocks, block_size, Hkv, D) per leaf.
+
+    Unlike :func:`init_cache` there is no batch or max_len dimension — rows
+    map positions to blocks through per-sequence block tables (see
+    ``repro.serving.kv_pool``)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim()
+    shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _scatter_prefill_blocks(pool, kvs, table, block_size: int):
+    """Write prefill KV (L, B, S, Hkv, D) into pool blocks via the table.
+
+    S is padded up to a block multiple; chunk j of row b goes to block
+    ``table[b, j]``.  Chunks past a row's true block count carry padding
+    and target the scratch block (table padding = 0), whose contents are
+    never attended.
+    """
+    L, B, S = kvs.shape[:3]
+    nS = -(-S // block_size)
+    pad = nS * block_size - S
+    if pad:
+        kvs = jnp.pad(kvs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    chunks = kvs.reshape(L, B * nS, block_size, *kvs.shape[3:])
+    blocks = table[:, :nS].reshape(-1)
+    return pool.at[:, blocks].set(chunks.astype(pool.dtype))
+
+
 def prefill(params, tokens, cfg: ModelConfig, par: ParallelContext = None,
-            *, max_len: int, embeddings=None, lengths=None):
+            *, max_len: int, embeddings=None, lengths=None, paged=None):
     """Run the prompt, build the KV cache. Returns (next_logits, cache).
 
     ``lengths``: (B,) true prompt lengths for right-padded batches; the
     returned logits are taken at each sequence's true last position.
+    ``paged``: optional {"k", "v", "table"} handle — block pools
+    (L, n_blocks, bs, Hkv, D) plus a (B, W) block table; prompt KV is
+    scattered into the rows' blocks instead of a fresh dense cache and the
+    returned cache carries the updated pools.
     """
     B, S = tokens.shape
     pos = (lengths - 1) if lengths is not None else jnp.full((B,), S - 1)
     logits, kvs, _ = forward(params, tokens, cfg, par, embeddings=embeddings,
                              return_kv=True, logit_positions=pos)
-    cache = init_cache(cfg, B, max_len)
     k, v = kvs  # (L, B, S, Hkv, D)
+    if paged is not None:
+        bs = paged["k"].shape[2]
+        return logits, {
+            "k": _scatter_prefill_blocks(paged["k"], k, paged["table"], bs),
+            "v": _scatter_prefill_blocks(paged["v"], v, paged["table"], bs),
+            "table": paged["table"],
+        }
+    cache = init_cache(cfg, B, max_len)
     cache = {
         "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
                                           (0, 0, 0, 0, 0)),
@@ -181,7 +223,9 @@ def decode_step(params, tokens, cache, cache_len, cfg: ModelConfig,
                 par: ParallelContext = None):
     """One decode step.
 
-    tokens: (B, 1) int32 — current token.  cache: stacked (L, B, S, Hkv, D).
+    tokens: (B, 1) int32 — current token.  cache: stacked (L, B, S, Hkv, D),
+    or a paged handle additionally carrying "table" (B, W) int32 with k/v
+    leaves shaped (L, n_blocks, bs, Hkv, D).
     cache_len: (B,) int32 — sequence length *after* this token is appended.
     Returns (logits (B, vocab) f32, new_cache).
     """
@@ -193,6 +237,10 @@ def decode_step(params, tokens, cache, cache_len, cfg: ModelConfig,
     windows = layer_windows(cfg)
 
     seq_par = par is not None and par.kv_seq_axis is not None
+    table = cache.get("table") if isinstance(cache, dict) else None
+    if table is not None and seq_par:
+        raise NotImplementedError(
+            "paged KV cache is not supported with sequence-parallel decode")
 
     def body(x, xs):
         lp, w, ck, cv = xs
@@ -202,8 +250,11 @@ def decode_step(params, tokens, cache, cache_len, cfg: ModelConfig,
                 lp, x, cfg, par, cache_k=ck, cache_v=cv,
                 cache_len=cache_len, window=w)
         else:
+            layer_cache = {"k": ck, "v": cv}
+            if table is not None:
+                layer_cache["table"] = table
             x, (nk, nv), _ = _layer(lp, x, cfg, par, positions=positions,
-                                    window=w, cache={"k": ck, "v": cv},
+                                    window=w, cache=layer_cache,
                                     cache_len=cache_len)
         return x, (nk, nv)
 
@@ -212,4 +263,7 @@ def decode_step(params, tokens, cache, cache_len, cfg: ModelConfig,
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     head = params["embedding"] if cfg.tie_embeddings else params["lm_head"]
     logits = L.lm_logits(head, x[:, 0], cfg.logit_softcap)
-    return logits, {"k": nk, "v": nv}
+    new_cache = {"k": nk, "v": nv}
+    if table is not None:
+        new_cache["table"] = table
+    return logits, new_cache

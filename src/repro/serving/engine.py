@@ -26,6 +26,26 @@ then releases any row that sampled a stop id or exhausted its token budget.
 Requests enter and leave the batch independently mid-flight — the decode
 batch stays full under mixed-length traffic, which is what makes parallel
 test-time-scaling samples ride along for free.
+
+The engine runs in one of two KV layouts:
+
+* **dense** (default): every slot owns a ``(max_len, Hkv, D)`` cache row
+  per layer, reserved up front.  ``fork`` physically replicates the
+  prompt's KV rows N times and ``reorder`` copies whole rows — O(N·prompt)
+  duplicated bytes for Best-of-N, plus a full ``max_len`` reservation per
+  slot regardless of actual sequence length.
+* **paged** (``paged=True``): KV lives in a shared, refcounted block pool
+  (``repro.serving.kv_pool``) and each row holds a block *table*.
+  ``fork`` becomes a refcount bump on the prompt's blocks (zero KV bytes
+  copied — samples share the prefix until copy-on-write triggers on their
+  first divergent write), ``reorder`` a table gather, and a slot only ever
+  holds blocks for tokens it has actually produced.  ``prepare_decode``
+  does the host-side block bookkeeping before each decode step and raises
+  :class:`~repro.serving.kv_pool.OutOfBlocks` when the pool is exhausted,
+  which the scheduler converts into preempting the youngest request.
+  Paged states reference pool blocks by id, so they must be used linearly
+  (step/merge/fork/release consume the state they are given); the dense
+  path keeps full functional semantics.
 """
 from __future__ import annotations
 
@@ -38,16 +58,26 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import ParallelContext
 from repro.models import api
+from repro.serving.kv_pool import KVPool, OutOfBlocks, blocks_for
 from repro.serving.sampler import SamplerConfig, logprobs_of, sample
 
 
 @dataclass
 class GenState:
-    """Decoding state for a batch of sequences (a jax pytree)."""
+    """Decoding state for a batch of sequences (a jax pytree).
+
+    ``cache`` is layout-dependent: dense states carry the full KV arrays
+    ({"k", "v"} of (L, B, S, Hkv, D), plus recurrent leaves for SSMs);
+    paged states carry only the per-row indexing — {"table": (B, W) int32
+    block ids, "n_blocks": (B,) int32 owned-block counts} — while the KV
+    bytes live in the engine's shared :class:`~repro.serving.kv_pool.
+    KVPool`.
+    """
 
     cache: dict
     cache_len: jnp.ndarray       # (B,) int32 — prompt + generated so far
@@ -67,7 +97,8 @@ jax.tree_util.register_dataclass(
 class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig,
                  par: Optional[ParallelContext] = None, *, max_len: int = 512,
-                 eos_id: int = 1, pad_id: int = 0):
+                 eos_id: int = 1, pad_id: int = 0, paged: bool = False,
+                 block_size: int = 16, n_blocks: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.par = par
@@ -75,14 +106,46 @@ class DecodeEngine:
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.model = api.get_model(cfg)
+        self.paged = paged
+        self.pool: Optional[KVPool] = None
+        if paged:
+            if cfg.family != "transformer":
+                raise ValueError(
+                    f"paged KV cache supports the transformer family only "
+                    f"(got {cfg.family!r})")
+            if max_len % block_size:
+                raise ValueError(
+                    f"max_len ({max_len}) must be a multiple of "
+                    f"block_size ({block_size})")
+            if n_blocks is None:
+                # scratch + eight full-length sequences' worth by default;
+                # servers should size this to their slot count / traffic
+                n_blocks = 1 + 8 * (max_len // block_size)
+            self.pool = KVPool(cfg, n_blocks, block_size)
         self._prefill_jit = jax.jit(self._prefill_impl)
+        self._prefill_paged_jit = jax.jit(self._prefill_paged_impl,
+                                          donate_argnums=(4, 5))
         self._gen_jit = jax.jit(self._generate_impl,
                                 static_argnames=("n_steps", "sc", "stop_ids"))
+        self._gen_paged_jit = jax.jit(
+            self._gen_paged_impl, donate_argnums=(2, 3),
+            static_argnames=("n_steps", "sc", "stop_ids"))
         self._step_jit = jax.jit(self._step_impl,
                                  static_argnames=("sc", "stop_ids"))
+        self._step_paged_jit = jax.jit(self._step_paged_impl,
+                                       donate_argnums=(2, 3),
+                                       static_argnames=("sc", "stop_ids"))
         self._merge_jit = jax.jit(self._merge_impl)
         self._merge_donate_jit = jax.jit(self._merge_impl,
                                          donate_argnums=(0,))
+        self._merge_paged_jit = jax.jit(self._merge_paged_impl)
+        self._merge_paged_donate_jit = jax.jit(self._merge_paged_impl,
+                                               donate_argnums=(0,))
+
+    @property
+    def table_width(self) -> int:
+        """Block-table slots per row (= max_len / block_size)."""
+        return self.max_len // self.pool.block_size
 
     # -- prefill ------------------------------------------------------------
     def _prefill_impl(self, params, tokens, lengths, embeddings=None):
@@ -92,16 +155,54 @@ class DecodeEngine:
             **({"embeddings": embeddings} if embeddings is not None else {}))
         return logits, cache
 
+    def _prefill_paged_impl(self, params, tokens, lengths, table, pool_k,
+                            pool_v, embeddings=None):
+        logits, cache = self.model.prefill(
+            params, tokens, self.cfg, self.par, max_len=self.max_len,
+            lengths=lengths,
+            paged={"k": pool_k, "v": pool_v, "table": table},
+            **({"embeddings": embeddings} if embeddings is not None else {}))
+        return logits, cache["k"], cache["v"]
+
     def prefill(self, tokens: jnp.ndarray, lengths: Optional[jnp.ndarray] = None,
                 embeddings=None) -> GenState:
         """tokens: (B, S) right-padded prompts; lengths: (B,) true lengths."""
         B, S = tokens.shape
         if lengths is None:
             lengths = jnp.full((B,), S, jnp.int32)
+        if self.paged:
+            return self._prefill_paged(tokens, lengths, embeddings)
         logits, cache = self._prefill_jit(self.params, tokens, lengths,
                                           embeddings)
         return GenState(
             cache=cache,
+            cache_len=lengths.astype(jnp.int32),
+            pending_logits=logits.astype(jnp.float32),
+            done=jnp.zeros((B,), bool),
+            logprob_sum=jnp.zeros((B,), jnp.float32),
+            n_gen=jnp.zeros((B,), jnp.int32),
+        )
+
+    def _prefill_paged(self, tokens, lengths, embeddings=None) -> GenState:
+        """Allocate prompt blocks (host) and scatter prefill KV into them."""
+        B = tokens.shape[0]
+        bs = self.pool.block_size
+        lens_h = np.asarray(jax.device_get(lengths))
+        per_row = [blocks_for(l, bs) for l in lens_h]
+        if sum(per_row) > self.pool.free_blocks:
+            raise OutOfBlocks(sum(per_row), self.pool.free_blocks)
+        table = np.zeros((B, self.table_width), np.int32)
+        n_blocks = np.zeros((B,), np.int32)
+        for i, n in enumerate(per_row):
+            table[i, :n] = self.pool.alloc(n)
+            n_blocks[i] = n
+        table_dev = jnp.asarray(table)
+        logits, pk, pv = self._prefill_paged_jit(
+            self.params, tokens, lengths, table_dev, self.pool.k,
+            self.pool.v, embeddings)
+        self.pool.adopt(pk, pv)
+        return GenState(
+            cache={"table": table_dev, "n_blocks": jnp.asarray(n_blocks)},
             cache_len=lengths.astype(jnp.int32),
             pending_logits=logits.astype(jnp.float32),
             done=jnp.zeros((B,), bool),
@@ -116,9 +217,14 @@ class DecodeEngine:
         server's lifetime and scatters admitted requests into its rows with
         :meth:`merge_rows`.  Done rows route their KV writes to the scratch
         slot, so idle rows cost one wasted lane of batched compute and no
-        correctness hazards.
+        correctness hazards.  In paged mode an empty row holds zero blocks
+        (its table is all scratch), so idle slots reserve no KV memory.
         """
-        cache = self.model.init_cache(self.cfg, batch, self.max_len)
+        if self.paged:
+            cache = {"table": jnp.zeros((batch, self.table_width), jnp.int32),
+                     "n_blocks": jnp.zeros((batch,), jnp.int32)}
+        else:
+            cache = self.model.init_cache(self.cfg, batch, self.max_len)
         return GenState(
             cache=cache,
             cache_len=jnp.zeros((batch,), jnp.int32),
@@ -135,8 +241,21 @@ class DecodeEngine:
         cache = jax.tree.map(
             lambda d, s: d.at[:, rows].set(s.astype(d.dtype)),
             dst.cache, src.cache)
+        return dataclasses.replace(
+            DecodeEngine._merge_vectors(dst, src, rows), cache=cache)
+
+    @staticmethod
+    def _merge_paged_impl(dst: GenState, src: GenState, rows) -> GenState:
+        # paged cache leaves (table, n_blocks) carry batch on axis 0
+        cache = jax.tree.map(lambda d, s: d.at[rows].set(s),
+                             dst.cache, src.cache)
+        return dataclasses.replace(
+            DecodeEngine._merge_vectors(dst, src, rows), cache=cache)
+
+    @staticmethod
+    def _merge_vectors(dst: GenState, src: GenState, rows) -> GenState:
         return GenState(
-            cache=cache,
+            cache=None,
             cache_len=dst.cache_len.at[rows].set(src.cache_len),
             pending_logits=dst.pending_logits.at[rows].set(
                 src.pending_logits),
@@ -149,36 +268,71 @@ class DecodeEngine:
                    *, donate: bool = False) -> GenState:
         """Scatter ``src``'s batch rows into ``dst`` at indices ``rows``.
 
-        ``rows`` is (B_src,) int32; cache leaves carry batch on axis 1
-        (axis 0 is the stacked layer dim), per-sequence vectors on axis 0.
-        This is the admission primitive: prefill a new request into a small
-        B_src state, then graft its cache/logits/length rows onto the live
-        n_slots decode state without touching other rows.  Jitted so the
-        per-leaf scatters fuse into one executable (recompiles once per
-        distinct B_src).  ``donate=True`` donates ``dst``'s buffers so the
-        scatter happens in place — the scheduler hot path uses this since
-        it immediately rebinds the state; callers that still need ``dst``
-        afterwards must keep the default.
+        ``rows`` is (B_src,) int32; dense cache leaves carry batch on
+        axis 1 (axis 0 is the stacked layer dim), paged table leaves and
+        per-sequence vectors on axis 0.  This is the admission primitive:
+        prefill a new request into a small B_src state, then graft its
+        cache/logits/length rows onto the live n_slots decode state without
+        touching other rows.  Jitted so the per-leaf scatters fuse into one
+        executable (recompiles once per distinct B_src).  ``donate=True``
+        donates ``dst``'s buffers so the scatter happens in place — the
+        scheduler hot path uses this since it immediately rebinds the
+        state; callers that still need ``dst`` afterwards must keep the
+        default.  Paged: the overwritten ``dst`` rows must already have
+        been released (their blocks freed) — block ownership moves from
+        ``src`` rows to ``dst`` rows without touching refcounts.
         """
-        fn = self._merge_donate_jit if donate else self._merge_jit
+        if self.paged:
+            fn = (self._merge_paged_donate_jit if donate
+                  else self._merge_paged_jit)
+        else:
+            fn = self._merge_donate_jit if donate else self._merge_jit
         return fn(dst, src, jnp.asarray(rows, jnp.int32))
 
     def release_rows(self, state: GenState, rows) -> GenState:
         """Mark ``rows`` done (slot release without a sampled stop token,
-        e.g. a request hitting its max_new_tokens budget)."""
+        e.g. a request hitting its max_new_tokens budget).  Paged: also
+        frees the rows' blocks back to the pool and re-points their tables
+        at the scratch block."""
+        rows = np.asarray(rows, np.int64).ravel()
+        if self.paged and rows.size:
+            table, n_blocks = (np.array(a) for a in jax.device_get(
+                (state.cache["table"], state.cache["n_blocks"])))
+            for r in rows:
+                self.pool.release(table[r, :n_blocks[r]])
+                table[r] = 0
+                n_blocks[r] = 0
+            state = dataclasses.replace(
+                state, cache={"table": jnp.asarray(table),
+                              "n_blocks": jnp.asarray(n_blocks)})
         rows = jnp.asarray(rows, jnp.int32)
         return dataclasses.replace(state, done=state.done.at[rows].set(True))
 
     # -- fork / reorder (TTS batch fan-out) ----------------------------------
     def fork(self, state: GenState, n: int) -> GenState:
         """Replicate each sequence n times (prompt-shared Best-of-N).
-        Row i maps to rows [i*n, (i+1)*n)."""
+        Row i maps to rows [i*n, (i+1)*n).
+
+        Dense: physically copies each row's KV n times.  Paged: bumps the
+        refcount of every owned block and repeats the table row — zero KV
+        blocks are allocated or copied; the samples share the prompt's
+        blocks until copy-on-write splits them at their first divergent
+        write (see :meth:`prepare_decode`)."""
 
         def rep(x, axis):
             return jnp.repeat(x, n, axis=axis)
 
+        if self.paged:
+            table, n_blocks = jax.device_get(
+                (state.cache["table"], state.cache["n_blocks"]))
+            for i in range(table.shape[0]):
+                if n > 1:
+                    self.pool.retain(table[i, :n_blocks[i]], times=n - 1)
+            cache = jax.tree.map(lambda x: rep(x, 0), state.cache)
+        else:
+            cache = jax.tree.map(lambda x: rep(x, 1), state.cache)
         return GenState(
-            cache=jax.tree.map(lambda x: rep(x, 1), state.cache),
+            cache=cache,
             cache_len=rep(state.cache_len, 0),
             pending_logits=rep(state.pending_logits, 0),
             done=rep(state.done, 0),
@@ -187,9 +341,28 @@ class DecodeEngine:
         )
 
     def reorder(self, state: GenState, idx: jnp.ndarray) -> GenState:
-        """Gather sequences by ``idx`` (beam-search survivor commit)."""
+        """Gather sequences by ``idx`` (beam-search survivor commit).
+
+        Dense: copies the gathered cache rows.  Paged: gathers the block
+        tables and fixes refcounts — rows dropped by ``idx`` release their
+        blocks, rows duplicated k times gain k-1 references (their copies
+        then diverge via copy-on-write)."""
+        if self.paged:
+            idx_h = np.asarray(jax.device_get(idx)).ravel()
+            table, n_blocks = jax.device_get(
+                (state.cache["table"], state.cache["n_blocks"]))
+            counts = np.bincount(idx_h, minlength=table.shape[0])
+            for r in range(table.shape[0]):
+                owned = table[r, :n_blocks[r]]
+                if counts[r] == 0:
+                    self.pool.release(owned)
+                elif counts[r] > 1:
+                    self.pool.retain(owned, times=int(counts[r]) - 1)
+            cache = jax.tree.map(lambda x: x[idx], state.cache)
+        else:
+            cache = jax.tree.map(lambda x: x[:, idx], state.cache)
         return GenState(
-            cache=jax.tree.map(lambda x: x[:, idx], state.cache),
+            cache=cache,
             cache_len=state.cache_len[idx],
             pending_logits=state.pending_logits[idx],
             done=state.done[idx],
@@ -197,9 +370,67 @@ class DecodeEngine:
             n_gen=state.n_gen[idx],
         )
 
+    # -- paged block bookkeeping ---------------------------------------------
+    def prepare_decode(self, state: GenState, n_steps: int = 1) -> GenState:
+        """Host-side paged bookkeeping before decoding ``n_steps`` tokens.
+
+        For every live (not-done) row: allocate the blocks its next
+        ``n_steps`` writes will land in, and copy-on-write any still-shared
+        block at or past the write frontier (post-fork tail blocks).  The
+        whole request is planned first and committed only if the free list
+        covers it, so an :class:`OutOfBlocks` raise leaves the pool and the
+        state untouched — the scheduler's preemption hook.  No-op in dense
+        mode.
+        """
+        if not self.paged:
+            return state
+        table, n_blocks, clen, done = jax.device_get(
+            (state.cache["table"], state.cache["n_blocks"],
+             state.cache_len, state.done))
+        table = np.array(table)
+        n_blocks = np.array(n_blocks)
+        bs = self.pool.block_size
+        plan_new: list[tuple] = []     # (row, slot)
+        plan_cow: list[tuple] = []     # (row, slot, old_block)
+        # planned CoWs drop a reference each, so the *last* planner of a
+        # shared block sees an effective refcount of 1 and writes in place
+        # (n-way fork costs n-1 copies, not n)
+        pending_drops: dict[int, int] = {}
+        for i in range(table.shape[0]):
+            if done[i]:
+                continue
+            last = int(clen[i]) + n_steps - 1   # final position written
+            if last > self.max_len - 2:
+                raise ValueError(
+                    f"row {i}: decoding {n_steps} steps from length "
+                    f"{int(clen[i])} overruns the usable sequence length "
+                    f"{self.max_len - 1} (last slot is KV scratch)")
+            first_slot = int(clen[i]) // bs     # block of the first write
+            for s in range(first_slot, int(n_blocks[i])):
+                blk = int(table[i, s])
+                if self.pool.refcount[blk] - pending_drops.get(blk, 0) > 1:
+                    plan_cow.append((i, s, blk))
+                    pending_drops[blk] = pending_drops.get(blk, 0) + 1
+            for s in range(int(n_blocks[i]), last // bs + 1):
+                plan_new.append((i, s))
+        needed = len(plan_new) + len(plan_cow)
+        if not needed:
+            return state
+        if needed > self.pool.free_blocks:
+            raise OutOfBlocks(needed, self.pool.free_blocks)
+        new_ids = self.pool.cow([b for _, _, b in plan_cow])
+        for (i, s, _), bid in zip(plan_cow, new_ids):
+            table[i, s] = bid
+        for (i, s), bid in zip(plan_new, self.pool.alloc(len(plan_new))):
+            table[i, s] = bid
+            n_blocks[i] = max(n_blocks[i], s + 1)
+        return dataclasses.replace(
+            state, cache={"table": jnp.asarray(table),
+                          "n_blocks": jnp.asarray(n_blocks)})
+
     # -- decode -------------------------------------------------------------
-    def _step_impl(self, params, state: GenState, rng, *, sc: SamplerConfig,
-                   stop_ids: tuple = ()):
+    def _step_core(self, params, state: GenState, cache_in, rng,
+                   sc: SamplerConfig, stop_ids: tuple):
         stop_ids = tuple(stop_ids) or (self.eos_id,)
         tok = sample(state.pending_logits, rng, sc)
         lp = logprobs_of(state.pending_logits, tok)
@@ -210,33 +441,61 @@ class DecodeEngine:
         new_len = jnp.where(state.done, state.cache_len, state.cache_len + 1)
         # Done rows must not clobber their last real KV slot: route their
         # (discarded) write to the reserved scratch slot max_len-1.  Usable
-        # sequence length is therefore max_len - 1.
+        # sequence length is therefore max_len - 1.  (The paged path maps
+        # the same max_len-1 position through the block table — it lands in
+        # the scratch block or an un-attended final offset.)
         model_len = jnp.where(state.done, self.max_len, new_len)
         logits, cache = self.model.decode_step(
-            params, tok[:, None], state.cache, model_len, self.cfg, self.par)
+            params, tok[:, None], cache_in, model_len, self.cfg, self.par)
         # Recurrent (non-positional) states have no scratch slot — restore
         # them for done rows.  These leaves are small (SSM/conv states).
         for key in ("conv", "ssm"):
             if key in cache:
                 d = state.done.reshape((1, -1) + (1,) * (cache[key].ndim - 2))
-                cache[key] = jnp.where(d, state.cache[key], cache[key])
+                cache[key] = jnp.where(d, cache_in[key], cache[key])
         # Freeze pending logits on done rows so that resume() continues from
         # the logits that followed the stop token, not scratch-slot garbage.
         pending = jnp.where(state.done[:, None], state.pending_logits,
                             logits.astype(jnp.float32))
         new_state = GenState(
-            cache=cache,
+            cache=None,  # caller installs the layout-appropriate cache
             cache_len=new_len,
             pending_logits=pending,
             done=new_done,
             logprob_sum=state.logprob_sum + jnp.where(state.done, 0.0, lp),
             n_gen=state.n_gen + jnp.where(state.done, 0, 1),
         )
-        return new_state, tok
+        return new_state, tok, cache
+
+    def _step_impl(self, params, state: GenState, rng, *, sc: SamplerConfig,
+                   stop_ids: tuple = ()):
+        st, tok, cache = self._step_core(params, state, state.cache, rng,
+                                         sc, stop_ids)
+        return dataclasses.replace(st, cache=cache), tok
+
+    def _step_paged_impl(self, params, state: GenState, pool_k, pool_v, rng,
+                         *, sc: SamplerConfig, stop_ids: tuple = ()):
+        cache_in = {"k": pool_k, "v": pool_v,
+                    "table": state.cache["table"]}
+        st, tok, cache = self._step_core(params, state, cache_in, rng,
+                                         sc, stop_ids)
+        st = dataclasses.replace(st, cache=state.cache)
+        return st, tok, cache["k"], cache["v"]
 
     def step(self, state: GenState, rng, sc: SamplerConfig = SamplerConfig(),
              stop_ids: tuple = ()):
-        """One decode step. Returns (new_state, sampled tokens (B,))."""
+        """One decode step. Returns (new_state, sampled tokens (B,)).
+
+        Paged: runs :meth:`prepare_decode` first (may raise
+        :class:`OutOfBlocks`), then scatters this step's KV into pool
+        blocks in place."""
+        if self.paged:
+            state = self.prepare_decode(state)
+            st, tok, pk, pv = self._step_paged_jit(
+                self.params, state, self.pool.k, self.pool.v, rng, sc=sc,
+                stop_ids=tuple(stop_ids))
+            self.pool.adopt(pk, pv)
+            return st, tok
         return self._step_jit(self.params, state, rng, sc=sc,
                               stop_ids=tuple(stop_ids))
 
@@ -250,11 +509,36 @@ class DecodeEngine:
         state, toks = jax.lax.scan(body, state, keys)
         return state, toks.T  # (B, n_steps)
 
+    def _gen_paged_impl(self, params, state: GenState, pool_k, pool_v, rng,
+                        *, n_steps: int, sc: SamplerConfig,
+                        stop_ids: tuple = ()):
+        def body(carry, key):
+            st, pk, pv = carry
+            st, tok, pk, pv = self._step_paged_impl(params, st, pk, pv, key,
+                                                    sc=sc, stop_ids=stop_ids)
+            return (st, pk, pv), tok
+
+        keys = jax.random.split(rng, n_steps)
+        (state, pk, pv), toks = jax.lax.scan(body, (state, pool_k, pool_v),
+                                             keys)
+        return state, toks.T, pk, pv
+
     def generate(self, state: GenState, n_steps: int, rng,
                  sc: SamplerConfig = SamplerConfig(), stop_ids: tuple = ()):
         """Decode up to n_steps tokens (stopping per-row at any id in
         ``stop_ids``, default EOS). Returns (final_state, (B, n_steps) tokens,
-        pad_id after stop)."""
+        pad_id after stop).
+
+        Paged: blocks covering the whole n_steps horizon are allocated (and
+        shared tails CoW'd) up front so the scan writes purely in place;
+        rows that stop early keep their surplus blocks until released."""
+        if self.paged:
+            state = self.prepare_decode(state, n_steps)
+            state, toks, pk, pv = self._gen_paged_jit(
+                self.params, state, self.pool.k, self.pool.v, rng,
+                n_steps=n_steps, sc=sc, stop_ids=tuple(stop_ids))
+            self.pool.adopt(pk, pv)
+            return state, toks
         return self._gen_jit(self.params, state, rng, n_steps=n_steps, sc=sc,
                              stop_ids=tuple(stop_ids))
 
@@ -324,6 +608,7 @@ class SchedulerMetrics:
         self.records: list[StepRecord] = []
         self.completed_requests = 0
         self.completed_samples = 0
+        self.preemptions = 0
         self.wall_s = 0.0
 
     def record(self, rec: StepRecord):
@@ -342,6 +627,7 @@ class SchedulerMetrics:
             "prefill_tokens": prefill,
             "completed_requests": self.completed_requests,
             "completed_samples": self.completed_samples,
+            "preemptions": self.preemptions,
             "wall_s": self.wall_s,
             "requests_per_s": (self.completed_requests / self.wall_s
                                if self.wall_s > 0 else 0.0),
@@ -374,11 +660,22 @@ class ContinuousScheduler:
     prefill/decode token counts and requests/s are recorded in
     ``self.metrics``.  ``step_once`` exposes the admit→decode→release cycle
     so callers can interleave ``submit`` with a running drain.
+
+    With a paged engine the scheduler also budgets KV *blocks*: admission
+    only proceeds while the pool can cover the head request's prompt
+    blocks, and when a decode step cannot get the blocks it needs
+    (:class:`OutOfBlocks`), the **youngest** live request is preempted —
+    its slots released, its blocks freed, the request requeued at the
+    queue head to rerun from scratch — and the step retried.  Preemptions
+    are counted in ``self.metrics.preemptions``; under greedy sampling a
+    preempted request's final tokens are unchanged (it simply re-prefills
+    later).
     """
 
     def __init__(self, engine: DecodeEngine, n_slots: int = 8,
                  prompt_len: int = 32, stop_ids: tuple = ()):
         self.engine = engine
+        self.paged = engine.paged
         self.n_slots = n_slots
         self.prompt_len = prompt_len
         self.stop_ids = tuple(stop_ids) or (engine.eos_id,)
@@ -417,8 +714,26 @@ class ContinuousScheduler:
                 f"request {req.req_id}: prompt ({req.prompt.shape[0]}) + "
                 f"max_new_tokens ({req.max_new_tokens}) = {budget} exceeds "
                 f"engine max_len - 1 = {self.engine.max_len - 1}")
+        if self.paged:
+            worst = self._worst_case_blocks(req)
+            if worst > self.engine.pool.capacity:
+                raise ValueError(
+                    f"request {req.req_id}: worst-case KV footprint "
+                    f"({worst} blocks) exceeds pool capacity "
+                    f"({self.engine.pool.capacity} blocks) — the request "
+                    f"could never run even alone")
         self._n_samples[req.req_id] = max(1, req.n_samples)
         self.queue.append(req)
+
+    def _worst_case_blocks(self, req: Request) -> int:
+        """Blocks the request needs when running alone at full divergence:
+        shared full prompt blocks + per-sample tail-CoW and growth."""
+        bs = self.engine.pool.block_size
+        plen = int(req.prompt.shape[0])
+        n = max(1, req.n_samples)
+        shared = plen // bs  # full prompt blocks stay shared
+        per_sample = blocks_for(plen + req.max_new_tokens, bs) - shared
+        return shared + n * per_sample
 
     def _pad(self, prompt):
         S = self.prompt_len
@@ -462,26 +777,46 @@ class ContinuousScheduler:
                                   admitted_step=self.step_count)
         return int(length)
 
+    def _prompt_blocks(self, req: Request) -> int:
+        return blocks_for(int(req.prompt.shape[0]),
+                          self.engine.pool.block_size)
+
     def _admit(self) -> tuple:
         """Fill free slots from the queue (FIFO). Consecutive plain
         requests admitted in the same step share one batched prefill; a
         TTS group prefills once and forks. Returns (requests admitted,
-        prompt tokens prefilled)."""
+        prompt tokens prefilled).
+
+        Paged: admission additionally stops (FIFO, no skipping) when the
+        pool cannot cover the head request's prompt blocks — decode-time
+        growth is handled by preemption, not reservation."""
         free = [i for i, s in enumerate(self.slots) if s is None]
+        blk_budget = self.engine.pool.free_blocks if self.paged else None
         admitted = prefill_tokens = 0
         while self.queue and free:
             n_head = max(1, self.queue[0].n_samples)
             if n_head > len(free):
                 break  # FIFO: the group waits for enough free slots
+            if self.paged and self._prompt_blocks(self.queue[0]) > blk_budget:
+                break  # FIFO: the head waits for blocks to free up
             if self.queue[0].n_samples > 1:
-                prefill_tokens += self._admit_group(self.queue.popleft(),
-                                                    free)
+                req = self.queue.popleft()
+                if self.paged:
+                    blk_budget -= self._prompt_blocks(req)
+                prefill_tokens += self._admit_group(req, free)
                 admitted += 1
                 continue
             plain = []
             while (self.queue and self.queue[0].n_samples <= 1
                    and len(plain) < len(free)):
+                if self.paged:
+                    need = self._prompt_blocks(self.queue[0])
+                    if need > blk_budget:
+                        break
+                    blk_budget -= need
                 plain.append(self.queue.popleft())
+            if not plain:
+                break
             prefill_tokens += self._admit_plain(plain, free)
             admitted += len(plain)
         return admitted, prefill_tokens
@@ -503,6 +838,34 @@ class ContinuousScheduler:
             self.metrics.completed_requests += 1
         self.slots[row] = None
 
+    # -- preemption (paged out-of-blocks) ------------------------------------
+    def _preempt_youngest(self):
+        """Free the youngest live request's slots and blocks and requeue it
+        at the queue head (it reruns from scratch).  Raises when only one
+        live request remains — preempting it could never unblock decoding,
+        the pool is simply too small for the workload."""
+        by_req: dict[int, list[int]] = {}
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                by_req.setdefault(s.req.req_id, []).append(i)
+        if len(by_req) <= 1:
+            raise RuntimeError(
+                "KV pool exhausted with a single live request — pool too "
+                "small to make progress (raise n_blocks)")
+        victim = max(by_req, key=lambda rid: (
+            self.slots[by_req[rid][0]].admitted_step, rid))
+        rows = by_req[victim]
+        req = self.slots[rows[0]].req
+        self.state = self.engine.release_rows(self.state, rows)
+        for r in rows:
+            self.slots[r] = None
+        # discard any already-finished samples of the victim; the rerun
+        # regenerates every sample (deterministic under greedy sampling)
+        dropped = self.completed.pop(victim, [])
+        self.metrics.completed_samples -= len(dropped)
+        self.queue.appendleft(req)
+        self.metrics.preemptions += 1
+
     # -- the admit -> decode -> release cycle --------------------------------
     def step_once(self, rng, sc: SamplerConfig = SamplerConfig()) -> bool:
         """One scheduler step. Returns False when idle (nothing admitted,
@@ -514,22 +877,36 @@ class ContinuousScheduler:
         for i in live:
             if self.slots[i].first_decode_step < 0:
                 self.slots[i].first_decode_step = self.step_count
-        self.state, toks = self.engine.step(self.state, rng, sc,
-                                            stop_ids=self.stop_ids)
+        while True:
+            try:
+                self.state, toks = self.engine.step(self.state, rng, sc,
+                                                    stop_ids=self.stop_ids)
+                break
+            except OutOfBlocks:
+                # atomic: the failed prepare touched neither pool nor state
+                self._preempt_youngest()
+                live = [i for i, s in enumerate(self.slots) if s is not None]
         toks_h, done_h, lp_h, ng_h = jax.device_get(
             (toks, self.state.done, self.state.logprob_sum,
              self.state.n_gen))
+        released = []
         over_budget = []
         for i in live:
             slot = self.slots[i]
             if bool(done_h[i]):          # sampled a stop id this step
                 self._release(i, "stop", float(lp_h[i]), int(ng_h[i]))
+                released.append(i)
                 continue
             slot.tokens.append(int(toks_h[i]))
             if len(slot.tokens) >= slot.req.max_new_tokens:
                 over_budget.append(i)
+                released.append(i)
                 self._release(i, "length", float(lp_h[i]), int(ng_h[i]))
-        if over_budget:
+        if self.paged and released:
+            # return every released row's blocks to the pool (stop rows
+            # included — done alone doesn't free paged memory)
+            self.state = self.engine.release_rows(self.state, released)
+        elif over_budget:
             # freeze the rows so they stop growing until a new occupant
             # overwrites them at admission
             self.state = self.engine.release_rows(self.state, over_budget)

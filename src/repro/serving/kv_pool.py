@@ -1,0 +1,210 @@
+"""Paged KV-cache block pool with copy-on-write prefix sharing.
+
+The dense decode cache reserves ``batch × max_len`` KV rows up front and
+``DecodeEngine.fork`` physically replicates the prompt's rows N times —
+exactly the waste the paper's fixed-hardware-budget argument targets
+(Best-of-N decode streams share one prompt).  This module carves the KV
+cache into fixed-size *blocks* instead:
+
+* device storage is one pool per engine: ``k``/``v`` of shape
+  ``(L, n_blocks, block_size, Hkv, D)`` — batch and max_len disappear;
+* each sequence row holds a *block table* (position-ordered block ids), so
+  block ``w`` of a row stores positions ``[w·bs, (w+1)·bs)``;
+* blocks are refcounted: ``fork`` bumps the refcount of every prompt block
+  (zero KV copies), and the first divergent write to a shared block
+  triggers copy-on-write (allocate + one-block device copy);
+* block 0 is reserved as the *scratch* block: table padding points at it
+  and done rows route their (discarded) decode writes there, mirroring the
+  dense engine's ``max_len - 1`` scratch-slot convention.
+
+Accounting (free list, refcounts, peak usage) is host-side — the scheduler
+already syncs per step — while bulk KV bytes only ever move on device
+(block copies via a jitted scatter).  The pool object is *mutable shared
+state*: paged ``GenState``\\ s reference pool blocks by id, so states must
+be used linearly (the continuous scheduler's natural discipline); stale
+pre-fork states are no longer backed once their blocks are CoW'd or freed.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+SCRATCH_BLOCK = 0
+
+
+class OutOfBlocks(RuntimeError):
+    """The free list cannot satisfy an allocation.
+
+    Carries ``needed``/``free`` so the scheduler can turn exhaustion into a
+    preemption decision instead of a crash.
+    """
+
+    def __init__(self, needed: int, free: int):
+        super().__init__(f"KV pool exhausted: need {needed} blocks, "
+                         f"{free} free")
+        self.needed = needed
+        self.free = free
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` positions."""
+    return -(-int(n_tokens) // block_size)
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _copy_blocks(k, v, src, dst):
+    """Device copy of whole blocks (CoW commit): pool[:, dst] = pool[:, src]."""
+    return k.at[:, dst].set(k[:, src]), v.at[:, dst].set(v[:, src])
+
+
+class KVPool:
+    """Refcounted block pool backing every paged sequence of one engine."""
+
+    def __init__(self, cfg: ModelConfig, n_blocks: int, block_size: int,
+                 dtype=None):
+        if n_blocks < 2:
+            raise ValueError("KVPool needs >= 2 blocks (block 0 is the "
+                             "reserved scratch block)")
+        from repro.models.transformer import init_paged_cache
+
+        self.cfg = cfg
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        storage = init_paged_cache(cfg, n_blocks, block_size, dtype)
+        self.k = storage["k"]
+        self.v = storage["v"]
+        self.refcount = np.zeros((n_blocks,), np.int32)
+        # block 0 is never handed out: scratch for done-row writes + padding
+        self._free: list[int] = list(range(n_blocks - 1, 0, -1))
+        self.peak_in_use = 0
+        self.cow_copies = 0
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.n_blocks - 1 - len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (total minus the scratch block)."""
+        return self.n_blocks - 1
+
+    def block_bytes(self) -> int:
+        """HBM bytes of one block across all layers (K + V)."""
+        per = self.cfg.n_layers * self.block_size * self.cfg.n_kv_heads
+        per *= self.cfg.resolved_head_dim() * self.k.dtype.itemsize
+        return 2 * per
+
+    def reset_peak(self):
+        """Start a fresh peak-tracking interval.
+
+        ``peak_in_use`` and ``cow_copies`` are lifetime counters; callers
+        attributing :meth:`stats` to a single run over a shared pool
+        (e.g. one sweep row per TTS spec) must snapshot an interval —
+        this rebases the peak to the current occupancy and returns the
+        ``cow_copies`` watermark to subtract from the interval's end
+        value."""
+        self.peak_in_use = self.blocks_in_use
+        return self.cow_copies
+
+    def stats(self) -> dict:
+        """Pool accounting.  ``peak_bytes_in_use`` is the *logical* peak
+        (blocks actually holding live KV): it is what a right-sized pool
+        must provision, and the number to compare against the dense
+        engine's batch×max_len reservation.  The storage physically
+        allocated by *this* pool is ``pool_reserved_bytes`` (all
+        ``n_blocks`` are backed up front)."""
+        return {
+            "n_blocks": self.n_blocks,
+            "block_size": self.block_size,
+            "blocks_in_use": self.blocks_in_use,
+            "peak_blocks_in_use": self.peak_in_use,
+            "free_blocks": self.free_blocks,
+            "cow_copies": self.cow_copies,
+            "block_bytes": self.block_bytes(),
+            "bytes_in_use": self.blocks_in_use * self.block_bytes(),
+            "peak_bytes_in_use": self.peak_in_use * self.block_bytes(),
+            "pool_reserved_bytes": self.n_blocks * self.block_bytes(),
+        }
+
+    # -- alloc / free / share ------------------------------------------------
+    def alloc(self, n: int = 1) -> list[int]:
+        """Take ``n`` blocks off the free list (refcount 1 each)."""
+        if n > len(self._free):
+            raise OutOfBlocks(n, len(self._free))
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self.refcount[b] = 1
+        self.peak_in_use = max(self.peak_in_use, self.blocks_in_use)
+        return out
+
+    def retain(self, blocks, times: int = 1):
+        """Bump refcounts (fork: prompt blocks gain one owner per sample)."""
+        for b in np.asarray(blocks, np.int64).ravel():
+            b = int(b)
+            if b == SCRATCH_BLOCK:
+                continue
+            if self.refcount[b] <= 0:
+                raise ValueError(f"retain of unallocated block {b}")
+            self.refcount[b] += times
+
+    def release(self, blocks):
+        """Drop one reference per block; blocks at refcount 0 return to the
+        free list."""
+        for b in np.asarray(blocks, np.int64).ravel():
+            b = int(b)
+            if b == SCRATCH_BLOCK:
+                continue
+            if self.refcount[b] <= 0:
+                raise ValueError(f"release of unallocated block {b}")
+            self.refcount[b] -= 1
+            if self.refcount[b] == 0:
+                self._free.append(b)
+
+    def shared(self, block: int) -> bool:
+        return self.refcount[int(block)] > 1
+
+    def adopt(self, k: jnp.ndarray, v: jnp.ndarray):
+        """Rebind the device arrays after a jitted update returned new
+        buffers (the functional-update handshake with the engine)."""
+        self.k, self.v = k, v
+
+    def cow(self, blocks) -> list[int]:
+        """Copy-on-write: give each (shared) block a private copy.
+
+        Allocates one fresh block per input, device-copies the contents,
+        and drops one reference on each source.  Returns the new ids.
+        Raises :class:`OutOfBlocks` before any mutation if the free list
+        cannot cover the request.
+        """
+        blocks = [int(b) for b in blocks]
+        if not blocks:
+            return []
+        if len(blocks) > len(self._free):
+            raise OutOfBlocks(len(blocks), len(self._free))
+        new = self.alloc(len(blocks))
+        self.k, self.v = _copy_blocks(self.k, self.v,
+                                      jnp.asarray(blocks, jnp.int32),
+                                      jnp.asarray(new, jnp.int32))
+        self.release(blocks)
+        self.cow_copies += len(blocks)
+        return new
+
+
+def dense_kv_bytes(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=None) -> int:
+    """What the dense engine reserves for ``batch`` slots (comparison
+    baseline for the paged pool's accounting)."""
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    per = cfg.n_layers * max_len * cfg.n_kv_heads * cfg.resolved_head_dim()
+    return 2 * batch * per * dtype.itemsize

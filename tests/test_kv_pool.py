@@ -1,0 +1,238 @@
+"""Paged KV block-pool unit tests: alloc/free round-trips, fork refcounts,
+copy-on-write triggering exactly on first divergent write, free-list
+exhaustion, and leak-free accounting through engine and scheduler runs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.engine import ContinuousScheduler, DecodeEngine, Request
+from repro.serving.kv_pool import (KVPool, OutOfBlocks, SCRATCH_BLOCK,
+                                   blocks_for, dense_kv_bytes)
+from repro.serving.sampler import SamplerConfig
+
+NO_STOP = (9999,)
+GREEDY = SamplerConfig(greedy=True)
+
+
+def paged_engine(params, cfg, tok, *, max_len=64, block_size=8,
+                 n_blocks=64):
+    """Fresh engine per test: the pool is mutable shared state."""
+    return DecodeEngine(params, cfg, max_len=max_len, eos_id=tok.eos_id,
+                        pad_id=tok.pad_id, paged=True,
+                        block_size=block_size, n_blocks=n_blocks)
+
+
+def prefill_text(engine, tok, texts, prompt_len=16):
+    ids, lens = tok.encode_batch(texts, prompt_len)
+    return engine.prefill(jnp.asarray(ids), jnp.asarray(lens))
+
+
+# ---------------------------------------------------------------------------
+# Raw pool mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_free_roundtrip(tiny_cfg):
+    pool = KVPool(tiny_cfg, n_blocks=9, block_size=4)
+    assert pool.capacity == 8 and pool.blocks_in_use == 0
+    a = pool.alloc(3)
+    b = pool.alloc(5)
+    assert len(set(a + b)) == 8 and SCRATCH_BLOCK not in a + b
+    assert pool.blocks_in_use == 8 and pool.free_blocks == 0
+    pool.release(a)
+    assert pool.blocks_in_use == 5 and pool.free_blocks == 3
+    c = pool.alloc(3)
+    assert set(c) == set(a)  # freed ids are reusable
+    pool.release(b + c)
+    assert pool.blocks_in_use == 0 and pool.free_blocks == 8
+    assert (pool.refcount == 0).all()
+    assert pool.peak_in_use == 8
+
+
+def test_retain_release_refcounts(tiny_cfg):
+    pool = KVPool(tiny_cfg, n_blocks=5, block_size=4)
+    (b,) = pool.alloc(1)
+    pool.retain([b], times=3)          # a 4-way fork's shared block
+    assert pool.refcount[b] == 4
+    for _ in range(3):
+        pool.release([b])
+        assert pool.blocks_in_use == 1  # still owned
+    pool.release([b])
+    assert pool.blocks_in_use == 0
+    with pytest.raises(ValueError):
+        pool.release([b])              # double free
+    with pytest.raises(ValueError):
+        pool.retain([b])               # retain of unallocated block
+
+
+def test_free_list_exhaustion_raises(tiny_cfg):
+    pool = KVPool(tiny_cfg, n_blocks=4, block_size=4)
+    pool.alloc(2)
+    with pytest.raises(OutOfBlocks) as e:
+        pool.alloc(2)
+    assert e.value.needed == 2 and e.value.free == 1
+    assert pool.blocks_in_use == 2  # failed alloc took nothing
+
+
+def test_cow_copies_contents_and_moves_ownership(tiny_cfg):
+    pool = KVPool(tiny_cfg, n_blocks=6, block_size=4)
+    (b,) = pool.alloc(1)
+    pool.k = pool.k.at[:, b].set(7.0)
+    pool.retain([b])                    # shared 2 ways
+    (nb,) = pool.cow([b])
+    assert nb != b
+    assert pool.refcount[b] == 1 and pool.refcount[nb] == 1
+    np.testing.assert_allclose(np.asarray(pool.k[:, nb]),
+                               np.asarray(pool.k[:, b]))
+    assert pool.cow_copies == 1
+    # exhaustion raises before mutating anything
+    pool.alloc(pool.free_blocks)
+    rc_before = pool.refcount.copy()
+    with pytest.raises(OutOfBlocks):
+        pool.cow([b, nb])
+    np.testing.assert_array_equal(pool.refcount, rc_before)
+
+
+def test_blocks_for_and_bytes_accounting(tiny_cfg):
+    assert blocks_for(1, 8) == 1 and blocks_for(8, 8) == 1
+    assert blocks_for(9, 8) == 2 and blocks_for(17, 8) == 3
+    pool = KVPool(tiny_cfg, n_blocks=9, block_size=8)
+    # 8 blocks of 8 tokens == one dense row of 64: identical KV bytes
+    assert 8 * pool.block_bytes() == dense_kv_bytes(tiny_cfg, 1, 64)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level accounting (fork / CoW / release)
+# ---------------------------------------------------------------------------
+
+
+def test_fork_bumps_refcounts_allocates_zero_blocks(trained_tiny, tiny_cfg,
+                                                    tok):
+    eng = paged_engine(trained_tiny, tiny_cfg, tok)
+    st = prefill_text(eng, tok, ["Q:3+4=?A:"])
+    used = eng.pool.blocks_in_use
+    table, n_blocks = jax.device_get((st.cache["table"],
+                                      st.cache["n_blocks"]))
+    st4 = eng.fork(st, 4)
+    # the acceptance-criterion assertion: fork allocates no KV blocks
+    assert eng.pool.blocks_in_use == used
+    for b in table[0, :n_blocks[0]]:
+        assert eng.pool.refcount[b] == 4
+    # every forked row's table points at the same prompt blocks
+    t4 = np.asarray(jax.device_get(st4.cache["table"]))
+    for r in range(4):
+        np.testing.assert_array_equal(t4[r], table[0])
+
+
+def test_cow_triggers_exactly_on_first_divergent_write(trained_tiny,
+                                                       tiny_cfg, tok):
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, block_size=8)
+    st = prefill_text(eng, tok, ["Q:3+4=?A:"])  # 10 tokens -> 2 blocks
+    plen = int(st.cache_len[0])
+    assert plen % 8 != 0, "test needs a shared partial tail block"
+    st = eng.fork(st, 2)
+    used = eng.pool.blocks_in_use
+    # first divergent write: exactly one CoW (one row copies the shared
+    # tail, the last owner writes in place), no other allocation
+    st, _ = eng.step(st, jax.random.key(0), GREEDY, stop_ids=NO_STOP)
+    assert eng.pool.cow_copies == 1
+    assert eng.pool.blocks_in_use == used + 1
+    # subsequent writes inside the now-private blocks: no further CoW
+    in_block = 8 - (plen + 1) % 8
+    for i in range(in_block):
+        st, _ = eng.step(st, jax.random.key(1 + i), GREEDY,
+                         stop_ids=NO_STOP)
+    assert eng.pool.cow_copies == 1
+    used = eng.pool.blocks_in_use
+    # crossing the block boundary allocates fresh blocks, not CoWs
+    st, _ = eng.step(st, jax.random.key(99), GREEDY, stop_ids=NO_STOP)
+    assert eng.pool.cow_copies == 1
+    assert eng.pool.blocks_in_use == used + 2  # one new block per row
+
+
+def test_block_aligned_fork_allocates_instead_of_cow(trained_tiny, tiny_cfg,
+                                                     tok):
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, max_len=60,
+                       block_size=5)
+    st = prefill_text(eng, tok, ["Q:3+4=?A:"])  # 10 tokens: exactly 2 blocks
+    assert int(st.cache_len[0]) % 5 == 0
+    st = eng.fork(st, 3)
+    used = eng.pool.blocks_in_use
+    st, _ = eng.step(st, jax.random.key(0), GREEDY, stop_ids=NO_STOP)
+    # nothing shared is written: every row opens a fresh block
+    assert eng.pool.cow_copies == 0
+    assert eng.pool.blocks_in_use == used + 3
+
+
+def test_release_rows_returns_pool_to_baseline(trained_tiny, tiny_cfg, tok):
+    eng = paged_engine(trained_tiny, tiny_cfg, tok)
+    st = prefill_text(eng, tok, ["Q:1+2=?A:", "Q:3+4=?A:"])
+    st = eng.fork(st, 2)
+    st, _ = eng.generate(st, 9, jax.random.key(0), GREEDY, stop_ids=NO_STOP)
+    assert eng.pool.blocks_in_use > 0
+    st = eng.release_rows(st, [0, 1, 2, 3])
+    assert eng.pool.blocks_in_use == 0
+    assert (eng.pool.refcount == 0).all()
+    # released tables point at scratch only
+    assert (np.asarray(jax.device_get(st.cache["table"])) == 0).all()
+
+
+def test_reorder_releases_dropped_and_retains_duplicated(trained_tiny,
+                                                         tiny_cfg, tok):
+    eng = paged_engine(trained_tiny, tiny_cfg, tok)
+    st = prefill_text(eng, tok, ["Q:1+2=?A:", "Q:3+4=?A:"])
+    used = eng.pool.blocks_in_use
+    # drop row 1, keep two references to row 0 (beam survivor commit)
+    st2 = eng.reorder(st, jnp.array([0, 0]))
+    assert eng.pool.blocks_in_use == used // 2
+    st2 = eng.release_rows(st2, [0, 1])
+    assert eng.pool.blocks_in_use == 0
+
+
+def test_out_of_blocks_prepare_is_atomic(trained_tiny, tiny_cfg, tok):
+    # pool: scratch + 2 blocks -> prompt fits exactly, first decode
+    # step needs a third block and must fail without touching the pool
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, block_size=8,
+                       n_blocks=3)
+    st = prefill_text(eng, tok, ["Q:33+44=?A:"])  # 13 tokens -> 2 blocks
+    assert eng.pool.free_blocks == 0
+    rc = eng.pool.refcount.copy()
+    with pytest.raises(OutOfBlocks):
+        eng.generate(st, 8, jax.random.key(0), GREEDY, stop_ids=NO_STOP)
+    np.testing.assert_array_equal(eng.pool.refcount, rc)
+    assert eng.pool.free_blocks == 0
+
+
+def test_prefill_raises_when_pool_cannot_hold_prompt(trained_tiny, tiny_cfg,
+                                                     tok):
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, block_size=8,
+                       n_blocks=2)  # capacity 1 block
+    with pytest.raises(OutOfBlocks):
+        prefill_text(eng, tok, ["Q:33+44=?A:"])  # needs 2 blocks
+    assert eng.pool.blocks_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-level accounting
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_run_leaves_no_leaked_blocks(trained_tiny, tiny_cfg, tok):
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, max_len=64,
+                       block_size=8, n_blocks=33)
+    sched = ContinuousScheduler(eng, n_slots=3, prompt_len=16,
+                                stop_ids=NO_STOP)
+    for i, m in enumerate([7, 3, 9, 5]):
+        sched.submit(Request(req_id=i,
+                             prompt=jnp.asarray(tok.encode(f"Q:{i}+2=?A:")),
+                             max_new_tokens=m))
+    sched.submit(Request(req_id=9,
+                         prompt=jnp.asarray(tok.encode("Q:5+4=?A:")),
+                         max_new_tokens=6, n_samples=3))
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert set(res) == {0, 1, 2, 3, 9}
+    # pool accounting returns to baseline after a full drain
+    assert eng.pool.blocks_in_use == 0
+    assert (eng.pool.refcount == 0).all()
+    assert eng.pool.peak_in_use > 0

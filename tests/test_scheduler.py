@@ -1,6 +1,7 @@
 """Continuous-batching scheduler tests: continuous admission, slot-reuse
-correctness against per-request generate, fork-shared TTS admission, and
-step-level metrics."""
+correctness against per-request generate, fork-shared TTS admission,
+step-level metrics, and paged-KV block budgeting (out-of-blocks
+preemption)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -225,3 +226,103 @@ def test_logprob_scorer_through_scheduler(engine, tok):
                           rng=jax.random.key(0), scorer=R.LogProbScorer(),
                           n_slots=4)
     assert 0.0 <= row["accuracy"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Paged KV: block-budget admission and out-of-blocks preemption
+# ---------------------------------------------------------------------------
+
+
+def _paged_engine(trained_tiny, tiny_cfg, tok, n_blocks):
+    return DecodeEngine(trained_tiny, tiny_cfg, max_len=64,
+                        eos_id=tok.eos_id, pad_id=tok.pad_id, paged=True,
+                        block_size=8, n_blocks=n_blocks)
+
+
+_PAGED_REQS = [("Q:2+7=?A:", 12), ("Q:1+1=?A:", 6), ("Q:9+9=?A:", 10),
+               ("Q:4+5=?A:", 8)]
+
+
+def test_tiny_pool_preempts_but_completes_everything(trained_tiny, tiny_cfg,
+                                                     tok, engine):
+    """A deliberately starved pool forces out-of-blocks preemption; every
+    request still completes with the same greedy tokens as the dense
+    reference, and the preemption count is reported in the metrics."""
+    eng = _paged_engine(trained_tiny, tiny_cfg, tok, n_blocks=8)
+    sched = ContinuousScheduler(eng, n_slots=3, prompt_len=16,
+                                stop_ids=NO_STOP)
+    for i, (text, max_new) in enumerate(_PAGED_REQS):
+        sched.submit(_req(tok, i, text, max_new))
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert set(res) == set(range(len(_PAGED_REQS)))
+    assert sched.metrics.preemptions > 0
+    assert sched.metrics.summary()["preemptions"] == \
+        sched.metrics.preemptions
+    # preempted requests rerun from scratch: outputs stay deterministic
+    for i, (text, max_new) in enumerate(_PAGED_REQS):
+        ref = _reference_tokens(engine, tok, text, max_new)
+        assert res[i] == ref, f"req {i}: {res[i]} != {ref}"
+    # nothing leaked despite the preemption churn
+    assert eng.pool.blocks_in_use == 0
+    assert sched.metrics.completed_requests == len(_PAGED_REQS)
+
+
+def test_roomy_pool_matches_dense_without_preemption(trained_tiny, tiny_cfg,
+                                                     tok, engine):
+    eng = _paged_engine(trained_tiny, tiny_cfg, tok, n_blocks=64)
+    sched = ContinuousScheduler(eng, n_slots=3, prompt_len=16,
+                                stop_ids=NO_STOP)
+    for i, (text, max_new) in enumerate(_PAGED_REQS):
+        sched.submit(_req(tok, i, text, max_new))
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert sched.metrics.preemptions == 0
+    for i, (text, max_new) in enumerate(_PAGED_REQS):
+        assert res[i] == _reference_tokens(engine, tok, text, max_new)
+    assert eng.pool.blocks_in_use == 0
+
+
+def test_paged_tts_group_preempted_mid_flight_reruns_all_samples(
+        trained_tiny, tiny_cfg, tok, engine):
+    """A Best-of-2 group admitted behind a long request gets preempted when
+    the pool runs dry; after its rerun both samples match the standalone
+    greedy stream (one fresh prefill, fork, CoW again)."""
+    eng = _paged_engine(trained_tiny, tiny_cfg, tok, n_blocks=9)
+    sched = ContinuousScheduler(eng, n_slots=3, prompt_len=16,
+                                stop_ids=NO_STOP)
+    sched.submit(_req(tok, 0, "Q:2+7=?A:", max_new=14))
+    sched.submit(_req(tok, 1, "Q:5+4=?A:", max_new=8, n_samples=2))
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert set(res) == {0, 1} and len(res[1]) == 2
+    ref = _reference_tokens(engine, tok, "Q:5+4=?A:", 8)
+    for stream in res[1]:
+        assert stream == ref
+    assert res[0] == _reference_tokens(engine, tok, "Q:2+7=?A:", 14)
+    assert eng.pool.blocks_in_use == 0
+
+
+def test_submit_rejects_request_that_could_never_fit(trained_tiny, tiny_cfg,
+                                                     tok):
+    """Worst-case block footprint beyond pool capacity fails fast at
+    submit instead of livelocking the preemption loop."""
+    eng = _paged_engine(trained_tiny, tiny_cfg, tok, n_blocks=4)
+    sched = ContinuousScheduler(eng, n_slots=3, prompt_len=16,
+                                stop_ids=NO_STOP)
+    with pytest.raises(ValueError):  # 10 + 30 tokens -> 5 blocks > 3
+        sched.submit(_req(tok, 0, "Q:2+7=?A:", max_new=30))
+    sched.submit(_req(tok, 1, "Q:2+7=?A:", max_new=10))  # 3 blocks: fits
+
+
+def test_paged_serving_row_reports_kv_stats(trained_tiny, tiny_cfg, tok):
+    """serve_best_of_n on a paged engine reports pool accounting and a
+    positive HBM saving vs the dense reservation at equal slot count."""
+    eng = _paged_engine(trained_tiny, tiny_cfg, tok, n_blocks=33)
+    tasks = T.gen_dataset(41, 3, reasoning=False, max_terms=2)
+    row = serve_best_of_n(eng, tok, tasks, n=2, max_tokens=8,
+                          rng=jax.random.key(0), scorer=R.OracleVerifier(),
+                          n_slots=4)
+    kv = row["serving"]["kv"]
+    assert kv["blocks_in_use"] == 0
+    assert 0 < kv["peak_blocks_in_use"] <= 32
+    assert kv["peak_bytes_in_use"] < kv["dense_bytes"]
+    assert kv["hbm_saved_bytes"] == (kv["dense_bytes"]
+                                     - kv["peak_bytes_in_use"])
