@@ -8,7 +8,12 @@ The decode slots are backed by the *paged* KV pool: each slot holds block
 ids instead of a dense max_len cache row, the Best-of-3 group's samples
 share the prompt's blocks (fork = refcount bump, split lazily by
 copy-on-write), and the pool stats printed at the end show the peak KV
-footprint vs the dense reservation.  Pass --dense to compare layouts.
+footprint vs the dense reservation.  Every request carries the same
+few-shot header, and the *cross-request prefix cache* (a radix tree over
+the pool) keeps that header's KV pinned after the first prefill — later
+requests prefill only their unique question, shown by the hit-rate /
+prefill-tokens-saved stats.  Pass --dense to compare layouts (dense has
+no block pool, hence no prefix cache).
 
     PYTHONPATH=src python examples/serve_batch.py [--dense]
 """
@@ -18,10 +23,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get_config
+from repro.data.tasks import fewshot_header
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import api
 from repro.serving.engine import ContinuousScheduler, DecodeEngine, Request
 from repro.serving.kv_pool import dense_kv_bytes
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import SamplerConfig
 
 PAGED = "--dense" not in sys.argv[1:]
@@ -29,30 +36,36 @@ tok = ByteTokenizer()
 cfg = get_config("qwen2.5-1.5b", smoke=True).with_(vocab_size=tok.vocab_size)
 model = api.get_model(cfg)
 params = model.init_params(jax.random.key(0), cfg)
-kv_kwargs = (dict(paged=True, block_size=8, n_blocks=49)  # 4 slots' worth
+kv_kwargs = (dict(paged=True, block_size=8, n_blocks=73)  # 6 slots' worth
              if PAGED else {})
 engine = DecodeEngine(params, cfg, max_len=96, eos_id=tok.eos_id,
                       pad_id=tok.pad_id, **kv_kwargs)
-sched = ContinuousScheduler(engine, n_slots=4, prompt_len=24)
+cache = PrefixCache(engine.pool) if PAGED else None
 
-prompts = [f"Q:{a}+{b}=?A:" for a, b in [(1, 2), (3, 4), (5, 6), (7, 8),
-                                          (2, 9), (4, 4)]]
+HEADER = fewshot_header(seed=3, n_shots=2)  # the shared cross-request prefix
+prompts = [HEADER + f"Q:{a}+{b}=?A:" for a, b in [(1, 2), (3, 4), (5, 6),
+                                                   (7, 8), (2, 9), (4, 4)]]
+prompt_len = max(len(tok.encode(p)) for p in prompts) + 1
+sched = ContinuousScheduler(engine, n_slots=4, prompt_len=prompt_len,
+                            prefix_cache=cache)
 for i, p in enumerate(prompts):
     # mixed budgets: short and long requests churn slots at different times
     sched.submit(Request(req_id=i, prompt=jnp.asarray(tok.encode(p)),
                          max_new_tokens=4 + 3 * (i % 2)))
 # a Best-of-3 TTS request: one prefill, forked into 3 slots
 sched.submit(Request(req_id=len(prompts),
-                     prompt=jnp.asarray(tok.encode("Q:6+3=?A:")),
+                     prompt=jnp.asarray(tok.encode(HEADER + "Q:6+3=?A:")),
                      max_new_tokens=6, n_samples=3))
 
 results = sched.run(jax.random.key(0), SamplerConfig(greedy=True))
+print(f"shared header ({len(HEADER)} chars): {HEADER!r}")
 for rid in sorted(results):
     if rid < len(prompts):
-        print(f"req {rid}: {prompts[rid]!r} -> {tok.decode(results[rid])!r}")
+        q = prompts[rid][len(HEADER):]
+        print(f"req {rid}: header+{q!r} -> {tok.decode(results[rid])!r}")
     else:
         outs = [tok.decode(s) for s in results[rid]]
-        print(f"req {rid} (best-of-3 'Q:6+3=?A:'): {outs!r}")
+        print(f"req {rid} (best-of-3 header+'Q:6+3=?A:'): {outs!r}")
 
 m = sched.metrics.summary()
 print(f"drained {m['completed_requests']} requests "
@@ -67,7 +80,14 @@ if PAGED:
     dense = dense_kv_bytes(cfg, 4, engine.max_len)
     print(f"paged kv: block_size={kv['block_size']} "
           f"peak_blocks={kv['peak_blocks_in_use']} "
-          f"cow_copies={kv['cow_copies']} leaked={kv['blocks_in_use']} "
+          f"cow_copies={kv['cow_copies']} "
           f"peak_bytes={kv['peak_bytes_in_use']} vs dense {dense} "
           f"({(1 - kv['peak_bytes_in_use'] / dense) * 100:.0f}% saved "
           f"with a right-sized pool)")
+    c = cache.stats()
+    print(f"prefix cache: hit_rate={c['hit_rate']:.2f} "
+          f"prefill_tokens_saved={m['prefill_tokens_saved']} "
+          f"of {m['prefill_tokens'] + m['prefill_tokens_saved']} prompt "
+          f"tokens; cached_blocks={c['cached_blocks']} "
+          f"evictions={c['evictions']} "
+          f"leaked={kv['blocks_in_use'] - c['cached_blocks']}")

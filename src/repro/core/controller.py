@@ -54,23 +54,31 @@ def run_method(engine, tok, task, spec: TTSSpec, rng, scorer):
 def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
                     max_tokens: int, rng, scorer, n_slots: int = 8,
                     prompt_len: Optional[int] = None,
-                    sc: SamplerConfig = SamplerConfig(temperature=0.8)):
+                    sc: SamplerConfig = SamplerConfig(temperature=0.8),
+                    prefix_cache=None):
     """Best-of-N over a task set through the continuous-batching scheduler.
 
     Every task is one TTS request: one prefill, ``fork`` into ``n`` slots;
     all tasks' samples share the slot pool, so the decode batch stays full
     across task boundaries instead of draining per task.  ``prompt_len``
-    defaults to the longest prompt in the task set.  Returns the same
-    accuracy/cost row shape as ``sweep`` plus the scheduler's step metrics.
+    defaults to the longest prompt in the task set.  ``prefix_cache``: a
+    :class:`~repro.serving.prefix_cache.PrefixCache` over the engine's
+    block pool (paged engines only); tasks sharing a system-prompt /
+    few-shot header then skip re-prefilling the common prefix, and the
+    serving row gains the cache's hit-rate/eviction stats.  Returns the
+    same accuracy/cost row shape as ``sweep`` plus the scheduler's step
+    metrics.
     """
     prompts = [jnp.asarray(tok.encode(task.prompt)) for task in tasks]
     if prompt_len is None:
         prompt_len = max((int(p.shape[0]) for p in prompts), default=1)
     sched = ContinuousScheduler(engine, n_slots=n_slots,
-                                prompt_len=prompt_len)
+                                prompt_len=prompt_len,
+                                prefix_cache=prefix_cache)
     # the pool's peak/CoW counters are lifetime values on a shared engine;
     # rebase them so this row reports its own interval, not the sweep's
     cow_base = engine.pool.reset_peak() if engine.paged else 0
+    cache_base = prefix_cache.stats() if prefix_cache is not None else None
     for i, prompt in enumerate(prompts):
         sched.submit(Request(req_id=i, prompt=prompt,
                              max_new_tokens=max_tokens, n_samples=n))
@@ -89,6 +97,15 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
             engine.cfg, n_slots, engine.max_len)
         serving["kv"]["hbm_saved_bytes"] = (
             serving["kv"]["dense_bytes"] - serving["kv"]["peak_bytes_in_use"])
+    if prefix_cache is not None:
+        # cache counters are lifetime values on a sweep-shared cache:
+        # report this row's interval (cached_blocks/bytes stay gauges)
+        pc = prefix_cache.stats()
+        for key in ("lookups", "hits", "tokens_matched", "insertions",
+                    "evictions"):
+            pc[key] -= cache_base[key]
+        pc["hit_rate"] = pc["hits"] / pc["lookups"] if pc["lookups"] else 0.0
+        serving["prefix_cache"] = pc
     correct = cost = 0
     for i, task in enumerate(tasks):
         samples = sorted(sched.completed[i], key=lambda s: s.sample_idx)
@@ -111,12 +128,15 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
 
 
 def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
-          rng, scorer, *, continuous: bool = False, n_slots: int = 8):
+          rng, scorer, *, continuous: bool = False, n_slots: int = 8,
+          prefix_cache=None):
     """Accuracy / decode-cost for each spec — one row per Pareto point.
 
     ``continuous=True`` runs Best-of-N specs through the slot-based
     scheduler (shared decode batch across tasks); other methods fall back
-    to the direct per-task path.
+    to the direct per-task path.  ``prefix_cache`` (continuous Best-of-N
+    only) is shared across every row, so common prompt prefixes persist
+    across the whole sweep, not just within one row.
     """
     rows = []
     for spec in specs:
@@ -125,7 +145,8 @@ def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
             rows.append(serve_best_of_n(
                 engine, tok, tasks, n=spec.budget,
                 max_tokens=spec.max_tokens, rng=k, scorer=scorer,
-                n_slots=max(n_slots, spec.budget)))
+                n_slots=max(n_slots, spec.budget),
+                prefix_cache=prefix_cache))
             continue
         correct = cost = 0
         for task in tasks:

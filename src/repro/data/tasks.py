@@ -72,6 +72,47 @@ def gen_dataset(seed: int, n: int, *, min_terms: int = 2, max_terms: int = 4,
             for _ in range(n)]
 
 
+# ---------------------------------------------------------------------------
+# Shared-prefix prompt building (the cross-request prefix-cache workload)
+# ---------------------------------------------------------------------------
+
+SYSTEM_PROMPT = "You solve arithmetic step by step."
+
+
+def fewshot_header(seed: int = 0, n_shots: int = 3, *,
+                   reasoning: bool = False,
+                   system_prompt: str = SYSTEM_PROMPT) -> str:
+    """A deterministic system-prompt + worked-examples header.
+
+    Test-time-scaling traffic repeats the same instructions and few-shot
+    examples in front of every task, so prompts built with one header
+    share a long common token prefix across *requests* — exactly what the
+    serving layer's cross-request prefix cache
+    (``repro.serving.prefix_cache``) converts into skipped prefill
+    compute.  Same (seed, n_shots) -> byte-identical header.
+    """
+    rng = random.Random(seed)
+    shots = [gen_task(rng, n_terms=2, reasoning=reasoning)
+             for _ in range(n_shots)]
+    return system_prompt + "".join(t.full_text for t in shots)
+
+
+def with_header(task: MathTask, header: str) -> MathTask:
+    """The task with ``header`` prepended to its question: ``prompt`` /
+    ``full_text`` then start with the shared prefix while answer checking
+    (``verify`` parses the completion, not the prompt) is unchanged."""
+    return dataclasses.replace(task, question=header + task.question)
+
+
+def shared_prefix_dataset(seed: int, n: int, *, n_shots: int = 3,
+                          reasoning: bool = False, **gen_kwargs) -> List[MathTask]:
+    """``gen_dataset`` with one common few-shot header on every prompt —
+    the benchmark/demo workload for the cross-request prefix cache."""
+    header = fewshot_header(seed, n_shots, reasoning=reasoning)
+    return [with_header(t, header)
+            for t in gen_dataset(seed, n, reasoning=reasoning, **gen_kwargs)]
+
+
 ANSWER_RE = re.compile(r"A:(-?\d+)\.")
 
 

@@ -49,6 +49,19 @@ def main():
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="pool size in blocks for --paged (0 = auto: one "
                          "dense-equivalent reservation per slot)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="keep completed prompt prefixes pinned in the "
+                         "paged KV pool (radix tree, LRU-evicted under "
+                         "pressure) so requests sharing a system prompt / "
+                         "few-shot header skip re-prefilling it; requires "
+                         "--paged --continuous")
+    ap.add_argument("--cache-capacity", type=int, default=0,
+                    help="max pool blocks the prefix cache may pin "
+                         "(0 = bounded only by pool pressure)")
+    ap.add_argument("--fewshot", type=int, default=0,
+                    help="prepend a shared header of N worked examples to "
+                         "every task prompt (the cross-request common "
+                         "prefix the cache exploits)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -95,12 +108,27 @@ def main():
                          n_blocks=n_blocks)
     engine = DecodeEngine(params, cfg, max_len=max_len, eos_id=tok.eos_id,
                           pad_id=tok.pad_id, **kv_kwargs)
-    tasks = T.gen_dataset(123, args.tasks)
+    prefix_cache = None
+    if args.prefix_cache:
+        if not (args.paged and args.continuous):
+            raise SystemExit("--prefix-cache requires --paged --continuous "
+                             "(the cache lives in the paged block pool and "
+                             "is driven by the scheduler)")
+        from repro.serving.prefix_cache import PrefixCache
+
+        prefix_cache = PrefixCache(
+            engine.pool, capacity_blocks=args.cache_capacity or None)
+    if args.fewshot:
+        tasks = T.shared_prefix_dataset(123, args.tasks,
+                                        n_shots=args.fewshot)
+    else:
+        tasks = T.gen_dataset(123, args.tasks)
     scorer = R.OracleVerifier()
     spec = TTSSpec(method=args.method, budget=args.budget,
                    max_tokens=args.max_tokens)
     rows = sweep(engine, tok, tasks, [spec], jax.random.key(0), scorer,
-                 continuous=args.continuous, n_slots=args.slots)
+                 continuous=args.continuous, n_slots=args.slots,
+                 prefix_cache=prefix_cache)
     for r in rows:
         print(f"[serve] {r['method']} budget={r['budget']} "
               f"accuracy={r['accuracy']:.3f} "
@@ -113,6 +141,13 @@ def main():
                   f"prefill_tokens={s['prefill_tokens']} "
                   f"decode_tokens={s['decode_tokens']} "
                   f"preemptions={s['preemptions']}")
+            if "prefix_cache" in s:
+                pc = s["prefix_cache"]
+                print(f"[serve] prefix cache: hit_rate={pc['hit_rate']:.2f} "
+                      f"tokens_matched={pc['tokens_matched']} "
+                      f"prefill_tokens_saved={s['prefill_tokens_saved']} "
+                      f"cached_blocks={pc['cached_blocks']} "
+                      f"evictions={pc['evictions']}")
             if "kv" in s:
                 kv = s["kv"]
                 print(f"[serve] paged kv: block_size={kv['block_size']} "

@@ -14,7 +14,13 @@ The transformer family additionally supports a *paged* cache layout:
 ``prefill(..., paged={"k", "v", "table"})`` scatters prompt KV into a
 block pool and ``decode_step`` routes through per-row block tables when
 the cache dict carries a ``"table"`` leaf (``init_paged_cache`` builds the
-pool storage; see ``repro.serving.kv_pool`` for the allocator).
+pool storage; see ``repro.serving.kv_pool`` for the allocator).  On top
+of that, ``prefill(..., paged=..., prefix={"k", "v", "len"})`` is a
+*partial prefill*: tokens hold only a prompt's uncached suffix, which
+attends over the supplied per-layer prefix KV (gathered from cached pool
+blocks) and is scattered into the table at the per-row cached offset —
+the engine hook for the cross-request prefix cache
+(``repro.serving.prefix_cache``).
 """
 from __future__ import annotations
 

@@ -181,7 +181,11 @@ def chunked_attention(
         pk = kv_chunk - Skv % kv_chunk
         k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
-        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pk)))
+        # pad kv positions with a sentinel past every reachable position
+        # (not 0: callers pass *semantic* positions — a 0-padded slot would
+        # alias the real position 0 and slip through the kv_len mask)
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pk)),
+                               constant_values=jnp.iinfo(jnp.int32).max // 2)
         Skv += pk
         if kv_len is None:
             kv_len = jnp.full((B,), Skv_orig, jnp.int32)
@@ -371,10 +375,20 @@ def attention_block(
     cache_len: Optional[jnp.ndarray] = None,
     cross_kv: Optional[tuple] = None,
     causal: bool = True,
+    prefix_kv: Optional[tuple] = None,
+    prefix_positions: Optional[jnp.ndarray] = None,
 ):
     """Full attention block. Returns (out, new_cache_kv or None).
 
     - training/prefill: cache is None, chunked attention over x itself.
+    - partial prefill (cross-request prefix cache): additionally
+      prefix_kv = (k, v) of shape (B, P, Hkv, D) — already-rope'd KV of a
+      cached prompt prefix — and prefix_positions (B, P), the prefix
+      token positions with invalid slots pushed past every query position
+      so the causal mask hides them.  ``x`` then holds only the uncached
+      suffix (its ``positions`` start at the cached length) and queries
+      attend over the concatenated prefix + suffix keys; only the
+      suffix's K/V is returned for caching.
     - decode: cache = {"k","v"} (B, S, Hkv, D); writes current K/V at
       cache_len-1 then attends (batch-sharded layout).
     - paged decode: cache additionally holds "table" (B, W) int32 and the
@@ -407,11 +421,23 @@ def attention_block(
         k = rope(k, positions, cfg.rope_theta)
 
     if cache is None:
-        o = chunked_attention(
-            q, k, v,
-            q_positions=positions, kv_positions=positions,
-            causal=causal, window=window, softcap=cfg.logit_softcap,
-        )
+        if prefix_kv is not None:
+            pk, pv = prefix_kv  # (B, P, Hkv, D), rope'd at pool-write time
+            kv_pos = jnp.concatenate(
+                [prefix_positions,
+                 jnp.broadcast_to(positions, (B, S))], axis=1)
+            o = chunked_attention(
+                q, jnp.concatenate([pk.astype(k.dtype), k], axis=1),
+                jnp.concatenate([pv.astype(v.dtype), v], axis=1),
+                q_positions=positions, kv_positions=kv_pos,
+                causal=causal, window=window, softcap=cfg.logit_softcap,
+            )
+        else:
+            o = chunked_attention(
+                q, k, v,
+                q_positions=positions, kv_positions=positions,
+                causal=causal, window=window, softcap=cfg.logit_softcap,
+            )
         new_kv = (k, v)
     elif "table" in cache:
         # paged decode: route the write through the block table.  A done

@@ -77,10 +77,12 @@ def abstract_params(cfg: ModelConfig) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _layer(p, x, cfg, par, *, positions, window, cache=None, cache_len=None):
+def _layer(p, x, cfg, par, *, positions, window, cache=None, cache_len=None,
+           prefix_kv=None, prefix_positions=None):
     h, new_kv = L.attention_block(
         p["attn"], L.rmsnorm(p["attn_norm"], x, cfg.norm_eps), cfg,
-        positions=positions, window=window, cache=cache, cache_len=cache_len)
+        positions=positions, window=window, cache=cache, cache_len=cache_len,
+        prefix_kv=prefix_kv, prefix_positions=prefix_positions)
     x = x + h
     hn = L.rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
     if cfg.moe:
@@ -103,33 +105,66 @@ def _layer(p, x, cfg, par, *, positions, window, cache=None, cache_len=None):
 
 def forward(params, tokens, cfg: ModelConfig, par: ParallelContext = None,
             *, embeddings: Optional[jnp.ndarray] = None, return_kv: bool = False,
-            logit_positions: Optional[jnp.ndarray] = None):
+            logit_positions: Optional[jnp.ndarray] = None,
+            prefix: Optional[dict] = None):
     """Full-sequence forward (training / prefill). Returns (logits, kv, aux).
 
     tokens: (B, S) int32.  ``embeddings``: optional (B, P, d) modality-stub
     prefix (VLM patches / audio frames) that replaces the embedding of the
     first P positions.
+
+    ``prefix``: optional cached-prefix handle for *partial prefill* —
+    {"k", "v": (L, B, P, Hkv, D) already-rope'd per-layer prefix KV,
+    "len": (B,) int32 cached lengths}.  ``tokens`` then holds only the
+    uncached suffix: token j of row b sits at global position
+    ``len[b] + j``, queries attend over prefix + suffix, and the returned
+    KV covers the suffix alone.  Prefix slots at or past a row's cached
+    length get their position pushed past every query so the causal mask
+    hides them (rows with len == 0 attend to none of the prefix).
     """
     dtype = jnp.dtype(cfg.dtype)
     x = L.embed(params["embedding"], tokens, dtype)
     if embeddings is not None:
+        if prefix is not None:
+            raise NotImplementedError(
+                "modality-stub embeddings cannot be combined with a cached "
+                "prefix (the patch positions would be ambiguous)")
         pre = L.linear(params["patch_proj"], embeddings.astype(dtype))
         x = jnp.concatenate([pre, x[:, embeddings.shape[1]:]], axis=1)
     if par is not None:
         x = par.constrain(x, "batch", "act_seq", None)
     B, S = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if prefix is not None:
+        offset = prefix["len"].astype(jnp.int32)  # (B,)
+        positions = offset[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+        P = prefix["k"].shape[2]
+        parr = jnp.arange(P, dtype=jnp.int32)[None]
+        # invalid prefix slots -> position P + S: strictly past any query
+        # (queries reach at most offset + S - 1 <= P + S - 2), so both the
+        # causal mask and the chunked kv_len mask drop them
+        prefix_positions = jnp.where(parr < offset[:, None], parr, P + S)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        prefix_positions = None
     windows = layer_windows(cfg)
 
     def body(carry, xs):
         x, aux = carry
-        lp, w = xs
-        x, kv, a = _layer(lp, x, cfg, par, positions=positions, window=w)
+        if prefix is None:
+            (lp, w), pkv = xs, None
+        else:
+            lp, w, pk, pv = xs
+            pkv = (pk, pv)
+        x, kv, a = _layer(lp, x, cfg, par, positions=positions, window=w,
+                          prefix_kv=pkv, prefix_positions=prefix_positions)
         return (x, aux + a), (kv if return_kv else None)
 
     body = jax.checkpoint(body) if cfg.remat == "full" else body
+    scan_xs = ((params["layers"], windows) if prefix is None else
+               (params["layers"], windows, prefix["k"], prefix["v"]))
     (x, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                                 (params["layers"], windows))
+                                 scan_xs)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if logit_positions is not None:
         # gather the true last position per sequence before the (large)
@@ -186,8 +221,29 @@ def _scatter_prefill_blocks(pool, kvs, table, block_size: int):
     return pool.at[:, blocks].set(chunks.astype(pool.dtype))
 
 
+def _scatter_suffix_blocks(pool, kvs, table, block_size: int, start):
+    """Write suffix KV (L, B, S, Hkv, D) into pool blocks at a per-row
+    positional offset: row b's token j lands at global position
+    ``start[b] + j``, i.e. pool[table[b, pos//bs], pos % bs].
+
+    Unlike :func:`_scatter_prefill_blocks` this writes position-by-position
+    (not whole blocks), because a misaligned cached prefix leaves the first
+    suffix tokens *inside* a partially-filled tail block whose earlier
+    offsets must survive.  Positions past the table's range (padding rows)
+    are clamped to the last slot — an un-attended offset or the scratch
+    block, mirroring the dense scratch-slot convention.
+    """
+    L, B, S = kvs.shape[:3]
+    W = table.shape[1]
+    pos = start.astype(jnp.int32)[:, None] + jnp.arange(S, dtype=jnp.int32)
+    pos = jnp.minimum(pos, W * block_size - 1)           # (B, S)
+    blk = jnp.take_along_axis(table, pos // block_size, axis=1)
+    return pool.at[:, blk, pos % block_size].set(kvs.astype(pool.dtype))
+
+
 def prefill(params, tokens, cfg: ModelConfig, par: ParallelContext = None,
-            *, max_len: int, embeddings=None, lengths=None, paged=None):
+            *, max_len: int, embeddings=None, lengths=None, paged=None,
+            prefix=None):
     """Run the prompt, build the KV cache. Returns (next_logits, cache).
 
     ``lengths``: (B,) true prompt lengths for right-padded batches; the
@@ -196,14 +252,32 @@ def prefill(params, tokens, cfg: ModelConfig, par: ParallelContext = None,
     (L, n_blocks, bs, Hkv, D) plus a (B, W) block table; prompt KV is
     scattered into the rows' blocks instead of a fresh dense cache and the
     returned cache carries the updated pools.
+    ``prefix``: optional cached-prefix handle (see :func:`forward`) for
+    *partial prefill* — requires ``paged``; ``tokens``/``lengths`` then
+    describe only the uncached suffix, whose KV is scattered into the
+    table at offset ``prefix["len"]`` while the prompt's cached positions
+    stay untouched.
     """
     B, S = tokens.shape
     pos = (lengths - 1) if lengths is not None else jnp.full((B,), S - 1)
+    if prefix is not None and paged is None:
+        raise ValueError("partial prefill over a cached prefix requires the "
+                         "paged cache layout")
     logits, kvs, _ = forward(params, tokens, cfg, par, embeddings=embeddings,
-                             return_kv=True, logit_positions=pos)
+                             return_kv=True, logit_positions=pos,
+                             prefix=prefix)
     k, v = kvs  # (L, B, S, Hkv, D)
     if paged is not None:
         bs = paged["k"].shape[2]
+        if prefix is not None:
+            start = prefix["len"]
+            return logits, {
+                "k": _scatter_suffix_blocks(paged["k"], k, paged["table"],
+                                            bs, start),
+                "v": _scatter_suffix_blocks(paged["v"], v, paged["table"],
+                                            bs, start),
+                "table": paged["table"],
+            }
         return logits, {
             "k": _scatter_prefill_blocks(paged["k"], k, paged["table"], bs),
             "v": _scatter_prefill_blocks(paged["v"], v, paged["table"], bs),

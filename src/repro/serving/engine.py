@@ -46,11 +46,29 @@ The engine runs in one of two KV layouts:
   Paged states reference pool blocks by id, so they must be used linearly
   (step/merge/fork/release consume the state they are given); the dense
   path keeps full functional semantics.
+
+On the paged layout the engine also supports the **cross-request prefix
+cache** (``repro.serving.prefix_cache``): ``prefill(suffix_tokens, ...,
+cached_table=, cached_lens=)`` is a *partial prefill* that runs the
+transformer only over a prompt's uncached suffix while attending over the
+cached prefix blocks (gathered from the pool through the row's table).
+The row takes ownership of the caller's per-block lease on the cached
+blocks (``PrefixCache.match`` retains them), a misaligned cached length
+copy-on-writes the partially-used tail block before the suffix extends
+it, and ``release_rows`` later drops exactly the row's references — the
+tree's own pins keep cached prefixes alive across requests.  The
+scheduler drives the full loop: longest-prefix-match at admission,
+insertion of completed prompt prefixes back into the tree, and LRU
+eviction of unreferenced cached blocks under pool pressure (via the
+pool's ``pressure_hook``) *before* falling back to out-of-blocks
+preemption.  ``SchedulerMetrics`` reports the hit rate and the prefill
+tokens the cache saved.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
@@ -64,6 +82,7 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import ParallelContext
 from repro.models import api
 from repro.serving.kv_pool import KVPool, OutOfBlocks, blocks_for
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import SamplerConfig, logprobs_of, sample
 
 
@@ -125,6 +144,8 @@ class DecodeEngine:
         self._prefill_jit = jax.jit(self._prefill_impl)
         self._prefill_paged_jit = jax.jit(self._prefill_paged_impl,
                                           donate_argnums=(4, 5))
+        self._prefill_cached_jit = jax.jit(self._prefill_cached_impl,
+                                           donate_argnums=(5, 6))
         self._gen_jit = jax.jit(self._generate_impl,
                                 static_argnames=("n_steps", "sc", "stop_ids"))
         self._gen_paged_jit = jax.jit(
@@ -164,12 +185,61 @@ class DecodeEngine:
             **({"embeddings": embeddings} if embeddings is not None else {}))
         return logits, cache["k"], cache["v"]
 
+    def _prefill_cached_impl(self, params, tokens, lengths, cached_lens,
+                             table, pool_k, pool_v):
+        """Partial prefill: gather the rows' cached prefix KV through their
+        (already fully planned) block tables, run the transformer over the
+        suffix tokens only, and scatter the suffix KV in at the per-row
+        offset.  Invalid gather slots (table padding, freshly allocated
+        suffix blocks) are masked inside ``forward`` via ``cached_lens``."""
+        bs = self.pool.block_size
+        W = table.shape[1]
+
+        def gather(pool):
+            g = pool[:, table]  # (L, B, W, bs, Hkv, D)
+            return g.reshape(g.shape[0], g.shape[1], W * bs, *g.shape[4:])
+
+        prefix = {"k": gather(pool_k), "v": gather(pool_v),
+                  "len": cached_lens}
+        logits, cache = self.model.prefill(
+            params, tokens, self.cfg, self.par, max_len=self.max_len,
+            lengths=lengths,
+            paged={"k": pool_k, "v": pool_v, "table": table},
+            prefix=prefix)
+        return logits, cache["k"], cache["v"]
+
     def prefill(self, tokens: jnp.ndarray, lengths: Optional[jnp.ndarray] = None,
-                embeddings=None) -> GenState:
-        """tokens: (B, S) right-padded prompts; lengths: (B,) true lengths."""
+                embeddings=None, *, cached_table=None,
+                cached_lens=None) -> GenState:
+        """tokens: (B, S) right-padded prompts; lengths: (B,) true lengths.
+
+        Partial prefill (paged engines only): ``cached_table`` (B, Wc)
+        block ids covering each row's cached prompt prefix plus
+        ``cached_lens`` (B,) cached lengths switch ``tokens``/``lengths``
+        to describing the *uncached suffix* only.  The transformer runs
+        over the suffix while attending over the cached blocks; each row
+        must arrive holding one reference per cached block (the lease
+        ``PrefixCache.match`` takes), which the resulting state owns and
+        ``release_rows`` later drops.  A cached length that is not a
+        block multiple has its partially-used tail block copy-on-written
+        before the suffix extends it, so shared cache blocks are never
+        written.  Every row needs at least one suffix token (the
+        next-token logits come from the suffix's last position).
+        """
         B, S = tokens.shape
         if lengths is None:
             lengths = jnp.full((B,), S, jnp.int32)
+        if cached_table is not None:
+            if not self.paged:
+                raise ValueError(
+                    "cached-prefix prefill requires a paged engine "
+                    "(DecodeEngine(paged=True))")
+            if embeddings is not None:
+                raise NotImplementedError(
+                    "cached-prefix prefill does not support modality-stub "
+                    "embeddings")
+            return self._prefill_with_prefix(tokens, lengths, cached_table,
+                                             cached_lens)
         if self.paged:
             return self._prefill_paged(tokens, lengths, embeddings)
         logits, cache = self._prefill_jit(self.params, tokens, lengths,
@@ -183,13 +253,71 @@ class DecodeEngine:
             n_gen=jnp.zeros((B,), jnp.int32),
         )
 
+    def _prefill_with_prefix(self, tokens, lengths, cached_table,
+                             cached_lens) -> GenState:
+        """Host-side planning for a cached-prefix partial prefill: build
+        each row's full block table (cached blocks + tail CoW + fresh
+        suffix blocks), then run the suffix-only device pass."""
+        B = tokens.shape[0]
+        bs = self.pool.block_size
+        lens_h = np.asarray(jax.device_get(lengths), np.int64)
+        cach_h = np.asarray(cached_lens, np.int64).ravel()
+        if cach_h.shape[0] != B:
+            raise ValueError(f"cached_lens has {cach_h.shape[0]} rows for a "
+                             f"batch of {B}")
+        if (lens_h < 1).any():
+            raise ValueError("cached-prefix prefill needs >= 1 suffix token "
+                             "per row (the next-token logits come from the "
+                             "suffix)")
+        totals = cach_h + lens_h
+        if (totals > self.max_len - 1).any():
+            raise ValueError(
+                f"cached + suffix length ({int(totals.max())}) overruns the "
+                f"usable sequence length {self.max_len - 1}")
+        ctab = np.asarray(cached_table, np.int64)
+        n_full = cach_h // bs
+        rem = cach_h % bs
+        n_tot = np.array([blocks_for(t, bs) for t in totals])
+        # tail CoW (one per misaligned row) + fresh suffix blocks
+        n_new = n_tot - (n_full + (rem > 0))
+        needed = int(n_new.sum() + (rem > 0).sum())
+        if not self.pool.reserve(needed):
+            raise OutOfBlocks(needed, self.pool.free_blocks)
+        table = np.zeros((B, self.table_width), np.int32)
+        for i in range(B):
+            table[i, :n_full[i]] = ctab[i, :n_full[i]]
+            if rem[i]:
+                # private copy of the partially-used cached tail block: the
+                # row's lease on the original moves to the copy (cow drops
+                # one source reference), and the suffix scatter may then
+                # extend offsets [rem, bs) without touching shared KV
+                (nt,) = self.pool.cow([int(ctab[i, n_full[i]])])
+                table[i, n_full[i]] = nt
+            if n_new[i]:
+                have = int(n_full[i] + (1 if rem[i] else 0))
+                table[i, have:n_tot[i]] = self.pool.alloc(int(n_new[i]))
+        table_dev = jnp.asarray(table)
+        logits, pk, pv = self._prefill_cached_jit(
+            self.params, tokens, lengths, jnp.asarray(cach_h, jnp.int32),
+            table_dev, self.pool.k, self.pool.v)
+        self.pool.adopt(pk, pv)
+        return GenState(
+            cache={"table": table_dev,
+                   "n_blocks": jnp.asarray(n_tot.astype(np.int32))},
+            cache_len=jnp.asarray(totals.astype(np.int32)),
+            pending_logits=logits.astype(jnp.float32),
+            done=jnp.zeros((B,), bool),
+            logprob_sum=jnp.zeros((B,), jnp.float32),
+            n_gen=jnp.zeros((B,), jnp.int32),
+        )
+
     def _prefill_paged(self, tokens, lengths, embeddings=None) -> GenState:
         """Allocate prompt blocks (host) and scatter prefill KV into them."""
         B = tokens.shape[0]
         bs = self.pool.block_size
         lens_h = np.asarray(jax.device_get(lengths))
         per_row = [blocks_for(l, bs) for l in lens_h]
-        if sum(per_row) > self.pool.free_blocks:
+        if not self.pool.reserve(sum(per_row)):
             raise OutOfBlocks(sum(per_row), self.pool.free_blocks)
         table = np.zeros((B, self.table_width), np.int32)
         n_blocks = np.zeros((B,), np.int32)
@@ -309,6 +437,8 @@ class DecodeEngine:
         return dataclasses.replace(state, done=state.done.at[rows].set(True))
 
     # -- fork / reorder (TTS batch fan-out) ----------------------------------
+    _dense_fork_warned = False  # class-level: warn once per process
+
     def fork(self, state: GenState, n: int) -> GenState:
         """Replicate each sequence n times (prompt-shared Best-of-N).
         Row i maps to rows [i*n, (i+1)*n).
@@ -318,6 +448,14 @@ class DecodeEngine:
         blocks are allocated or copied; the samples share the prompt's
         blocks until copy-on-write splits them at their first divergent
         write (see :meth:`prepare_decode`)."""
+        if not self.paged and n > 1 and not DecodeEngine._dense_fork_warned:
+            DecodeEngine._dense_fork_warned = True
+            warnings.warn(
+                "DecodeEngine.fork on the dense KV layout physically "
+                "replicates each row's prompt KV n times (O(n*prompt) "
+                "duplicated bytes); construct the engine with paged=True "
+                "for zero-copy prefix sharing via the refcounted block "
+                "pool", RuntimeWarning, stacklevel=2)
 
         def rep(x, axis):
             return jnp.repeat(x, n, axis=axis)
@@ -416,7 +554,7 @@ class DecodeEngine:
         needed = len(plan_new) + len(plan_cow)
         if not needed:
             return state
-        if needed > self.pool.free_blocks:
+        if not self.pool.reserve(needed):
             raise OutOfBlocks(needed, self.pool.free_blocks)
         new_ids = self.pool.cow([b for _, _, b in plan_cow])
         for (i, s, _), bid in zip(plan_cow, new_ids):
@@ -610,6 +748,13 @@ class SchedulerMetrics:
         self.completed_samples = 0
         self.preemptions = 0
         self.wall_s = 0.0
+        # cross-request prefix cache (zero unless a cache is attached):
+        # one lookup per admitted request; a hit means some prefix of the
+        # prompt was served from cached blocks, and prefill_tokens_saved
+        # counts the prompt tokens whose prefill compute was skipped
+        self.cache_lookups = 0
+        self.cache_hits = 0
+        self.prefill_tokens_saved = 0
 
     def record(self, rec: StepRecord):
         self.records.append(rec)
@@ -633,6 +778,11 @@ class SchedulerMetrics:
                                if self.wall_s > 0 else 0.0),
             "decode_tok_per_s": (decode / self.wall_s
                                  if self.wall_s > 0 else 0.0),
+            "prefix_cache_lookups": self.cache_lookups,
+            "prefix_cache_hits": self.cache_hits,
+            "prefix_cache_hit_rate": (self.cache_hits / self.cache_lookups
+                                      if self.cache_lookups else 0.0),
+            "prefill_tokens_saved": self.prefill_tokens_saved,
         }
 
 
@@ -670,15 +820,38 @@ class ContinuousScheduler:
     are counted in ``self.metrics.preemptions``; under greedy sampling a
     preempted request's final tokens are unchanged (it simply re-prefills
     later).
+
+    With a :class:`~repro.serving.prefix_cache.PrefixCache` attached
+    (paged engines only), admission becomes **cache-aware**: each request
+    does a longest-prefix-match against the radix tree, leases the
+    matched blocks, and prefills only the uncached suffix (the engine's
+    partial-prefill path); block budgeting counts only the *new* blocks a
+    request needs.  Right after its prefill the request's full prompt
+    blocks are inserted into the tree — so the very next admission (even
+    in the same step) can hit, and a preempted request re-prefills almost
+    for free — and completed rows re-touch their prefix on release.
+    Because the cache registers itself as the pool's pressure hook, block
+    shortages first evict LRU unreferenced cached leaves and only then
+    fall back to preemption.  Hit rate and prefill-tokens-saved land in
+    ``self.metrics``.
     """
 
     def __init__(self, engine: DecodeEngine, n_slots: int = 8,
-                 prompt_len: int = 32, stop_ids: tuple = ()):
+                 prompt_len: int = 32, stop_ids: tuple = (),
+                 prefix_cache: Optional[PrefixCache] = None):
         self.engine = engine
         self.paged = engine.paged
         self.n_slots = n_slots
         self.prompt_len = prompt_len
         self.stop_ids = tuple(stop_ids) or (engine.eos_id,)
+        if prefix_cache is not None:
+            if not engine.paged:
+                raise ValueError("prefix_cache requires a paged engine "
+                                 "(DecodeEngine(paged=True))")
+            if prefix_cache.pool is not engine.pool:
+                raise ValueError("prefix_cache is bound to a different "
+                                 "KVPool than the engine's")
+        self.cache = prefix_cache
         self.queue: deque[Request] = deque()
         self.slots: list[Optional[_Slot]] = [None] * n_slots
         self.state: Optional[GenState] = None   # built on first admission
@@ -781,6 +954,67 @@ class ContinuousScheduler:
         return blocks_for(int(req.prompt.shape[0]),
                           self.engine.pool.block_size)
 
+    def _insert_prompt(self, toks: list, table_row) -> None:
+        """Record a prompt's full blocks in the prefix cache (the single
+        insert contract shared by admission and release)."""
+        n_ins = len(toks) // self.engine.pool.block_size
+        if n_ins:
+            self.cache.insert(toks, np.asarray(table_row)[:n_ins])
+
+    def _admit_cached(self, req: Request, free: list) -> int:
+        """Cache-aware admission of one request (plain or TTS group):
+        longest-prefix-match against the radix tree, lease the matched
+        blocks, partial-prefill the uncached suffix, then insert the full
+        prompt's blocks back into the tree (so even the next admission in
+        this same step can hit, and a preempted request readmits almost
+        for free).  Returns the suffix tokens prefilled, or -1 when the
+        pool cannot cover the request's *new* blocks even after cache
+        eviction — the head then waits (FIFO), holding no lease."""
+        toks = [int(t) for t in np.asarray(jax.device_get(req.prompt)).ravel()]
+        plen = len(toks)
+        bs = self.engine.pool.block_size
+        # cap the match at plen - 1: at least one suffix token must be
+        # recomputed to produce the row's next-token logits
+        blocks, clen = self.cache.match(toks[:plen - 1])
+        need = blocks_for(plen, bs) - clen // bs  # tail CoW + fresh blocks
+        if not self.engine.pool.reserve(need):
+            if blocks:
+                self.engine.pool.release(blocks)  # abandon the lease
+            return -1
+        # scheduler-level hit accounting covers *admitted* requests only
+        # (an abandoned attempt re-matches next step; the cache's own
+        # stats() still count every raw lookup)
+        self.metrics.cache_lookups += 1
+        suffix = toks[clen:]
+        padded, _ = self._pad(jnp.asarray(suffix, jnp.int32))
+        if clen:
+            ctab = np.zeros((1, self.engine.table_width), np.int32)
+            ctab[0, :len(blocks)] = blocks
+            st = self.engine.prefill(padded[None],
+                                     jnp.array([len(suffix)], jnp.int32),
+                                     cached_table=ctab,
+                                     cached_lens=np.array([clen], np.int64))
+        else:
+            # miss: the plain paged prefill skips the (masked) full-width
+            # prefix gather the partial path would pay for nothing
+            st = self.engine.prefill(padded[None],
+                                     jnp.array([len(suffix)], jnp.int32))
+        self.n_prefills += 1
+        if clen:
+            self.metrics.cache_hits += 1
+            self.metrics.prefill_tokens_saved += clen
+        self._insert_prompt(toks, np.asarray(jax.device_get(
+            st.cache["table"]))[0])
+        n = max(1, req.n_samples)
+        if n > 1:
+            st = self.engine.fork(st, n)
+        rows = [free.pop(0) for _ in range(n)]
+        self._merge(st, rows)
+        for j, r in enumerate(rows):
+            self.slots[r] = _Slot(req=req, sample_idx=j,
+                                  admitted_step=self.step_count)
+        return len(suffix)
+
     def _admit(self) -> tuple:
         """Fill free slots from the queue (FIFO). Consecutive plain
         requests admitted in the same step share one batched prefill; a
@@ -789,10 +1023,23 @@ class ContinuousScheduler:
 
         Paged: admission additionally stops (FIFO, no skipping) when the
         pool cannot cover the head request's prompt blocks — decode-time
-        growth is handled by preemption, not reservation."""
+        growth is handled by preemption, not reservation.  With a prefix
+        cache attached, requests admit one at a time through the
+        cache-aware partial-prefill path instead."""
         free = [i for i, s in enumerate(self.slots) if s is None]
-        blk_budget = self.engine.pool.free_blocks if self.paged else None
         admitted = prefill_tokens = 0
+        if self.cache is not None:
+            while self.queue and free:
+                if max(1, self.queue[0].n_samples) > len(free):
+                    break  # FIFO: the group waits for enough free slots
+                got = self._admit_cached(self.queue[0], free)
+                if got < 0:
+                    break  # FIFO: the head waits for blocks
+                self.queue.popleft()
+                admitted += 1
+                prefill_tokens += got
+            return admitted, prefill_tokens
+        blk_budget = self.engine.pool.free_blocks if self.paged else None
         while self.queue and free:
             n_head = max(1, self.queue[0].n_samples)
             if n_head > len(free):
@@ -891,9 +1138,11 @@ class ContinuousScheduler:
              self.state.n_gen))
         released = []
         over_budget = []
+        released_reqs: list[tuple] = []
         for i in live:
             slot = self.slots[i]
             if bool(done_h[i]):          # sampled a stop id this step
+                released_reqs.append((i, slot.req))
                 self._release(i, "stop", float(lp_h[i]), int(ng_h[i]))
                 released.append(i)
                 continue
@@ -901,8 +1150,25 @@ class ContinuousScheduler:
             if len(slot.tokens) >= slot.req.max_new_tokens:
                 over_budget.append(i)
                 released.append(i)
+                released_reqs.append((i, slot.req))
                 self._release(i, "length", float(lp_h[i]), int(ng_h[i]))
         if self.paged and released:
+            if self.cache is not None:
+                # re-insert completed prompt prefixes before the rows'
+                # blocks go back to the pool: normally an idempotent LRU
+                # touch (admission already inserted), but it restores
+                # entries that pool pressure evicted mid-flight — the
+                # blocks still hold valid prompt KV (full prompt blocks
+                # sit below the write frontier and are never CoW'd)
+                table = np.asarray(jax.device_get(self.state.cache["table"]))
+                seen: set = set()
+                for r, req in released_reqs:
+                    if req.req_id in seen:  # one insert per group, not row
+                        continue
+                    seen.add(req.req_id)
+                    toks = [int(t) for t in
+                            np.asarray(jax.device_get(req.prompt)).ravel()]
+                    self._insert_prompt(toks, table[r])
             # return every released row's blocks to the pool (stop rows
             # included — done alone doesn't free paged memory)
             self.state = self.engine.release_rows(self.state, released)

@@ -27,7 +27,7 @@ pre-fork states are no longer backed once their blocks are CoW'd or freed.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +84,12 @@ class KVPool:
         self._free: list[int] = list(range(n_blocks - 1, 0, -1))
         self.peak_in_use = 0
         self.cow_copies = 0
+        # Called with the shortfall (blocks still needed) when reserve()
+        # finds the free list short; the cross-request prefix cache
+        # registers its LRU eviction here so cached-but-unreferenced blocks
+        # are reclaimed *before* allocation failures escalate to scheduler
+        # preemption.  Must only release blocks it owns a reference to.
+        self.pressure_hook: Optional[Callable[[int], int]] = None
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -138,6 +144,18 @@ class KVPool:
         }
 
     # -- alloc / free / share ------------------------------------------------
+    def reserve(self, n: int) -> bool:
+        """Try to ensure ``n`` free blocks, invoking the pressure hook to
+        reclaim evictable blocks when the free list is short.  Returns
+        whether the free list now covers ``n``; callers raise
+        :class:`OutOfBlocks` (or preempt) themselves on failure — the pool
+        never evicts on its own, it only asks the registered cache to."""
+        if n <= len(self._free):
+            return True
+        if self.pressure_hook is not None:
+            self.pressure_hook(n - len(self._free))
+        return n <= len(self._free)
+
     def alloc(self, n: int = 1) -> list[int]:
         """Take ``n`` blocks off the free list (refcount 1 each)."""
         if n > len(self._free):

@@ -218,6 +218,40 @@ def test_prefill_raises_when_pool_cannot_hold_prompt(trained_tiny, tiny_cfg,
 # ---------------------------------------------------------------------------
 
 
+def test_scheduler_drain_with_prefix_cache_pins_cache_blocks_only(
+        trained_tiny, tiny_cfg, tok):
+    """Leak check with the cross-request prefix cache attached: after a
+    full drain the only live pool references are the radix tree's pins —
+    ``refcount == 1`` exactly on the cached block set, zero elsewhere —
+    and clearing the cache returns the pool to empty."""
+    from repro.serving.prefix_cache import PrefixCache
+
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, max_len=96,
+                       block_size=8, n_blocks=97)
+    cache = PrefixCache(eng.pool)
+    sched = ContinuousScheduler(eng, n_slots=3, prompt_len=48,
+                                stop_ids=NO_STOP, prefix_cache=cache)
+    header = "Q:1+2=?A:3.Q:4+5=?A:9."
+    for i, m in enumerate([7, 3, 9, 5]):
+        sched.submit(Request(
+            req_id=i, prompt=jnp.asarray(tok.encode(f"{header}Q:{i}+2=?A:")),
+            max_new_tokens=m))
+    sched.submit(Request(req_id=9,
+                         prompt=jnp.asarray(tok.encode(f"{header}Q:5+4=?A:")),
+                         max_new_tokens=6, n_samples=3))
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert set(res) == {0, 1, 2, 3, 9}
+    assert sched.metrics.cache_hits > 0
+    # pool refcounts == cache-pinned blocks only
+    cached = cache.cached_block_ids()
+    assert eng.pool.blocks_in_use == len(cached) == cache.n_cached_blocks
+    assert all(eng.pool.refcount[b] == 1 for b in cached)
+    assert int(eng.pool.refcount.sum()) == len(cached)
+    cache.clear()
+    assert eng.pool.blocks_in_use == 0
+    assert (eng.pool.refcount == 0).all()
+
+
 def test_scheduler_run_leaves_no_leaked_blocks(trained_tiny, tiny_cfg, tok):
     eng = paged_engine(trained_tiny, tiny_cfg, tok, max_len=64,
                        block_size=8, n_blocks=33)

@@ -1,0 +1,465 @@
+"""Cross-request prefix cache tests.
+
+Three layers, mirroring the subsystem:
+
+* radix-tree mechanics — match/insert/LRU-evict over a raw pool, lease
+  refcounts, partial-chunk tail matches, the capacity cap;
+* engine partial prefill — cached-prefix + suffix prefill must reproduce
+  the full prefill's logits (float tolerance) and greedy token streams
+  (exactly) across block-boundary-aligned and misaligned split points;
+* scheduler integration — cache-aware admission serves shared headers
+  from the tree at unchanged outputs, eviction precedes preemption, and
+  eviction-then-readmission recomputes and re-caches correctly.
+
+The full split-point × block-size grid with eviction churn is ``slow``;
+the fast subset keeps every split class alive in CI.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.engine import ContinuousScheduler, DecodeEngine, Request
+from repro.serving.kv_pool import KVPool, OutOfBlocks, blocks_for
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.sampler import SamplerConfig
+
+NO_STOP = (9999,)
+GREEDY = SamplerConfig(greedy=True)
+ATOL = 1e-4
+
+
+def paged_engine(params, cfg, tok, *, max_len=64, block_size=8,
+                 n_blocks=64):
+    return DecodeEngine(params, cfg, max_len=max_len, eos_id=tok.eos_id,
+                        pad_id=tok.pad_id, paged=True,
+                        block_size=block_size, n_blocks=n_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Radix-tree mechanics (no model: a raw pool is enough)
+# ---------------------------------------------------------------------------
+
+
+def test_match_insert_longest_prefix(tiny_cfg):
+    pool = KVPool(tiny_cfg, n_blocks=32, block_size=4)
+    cache = PrefixCache(pool)
+    toks = list(range(100, 112))                       # 3 full blocks
+    blocks = pool.alloc(3)
+    assert cache.insert(toks, blocks) == 3
+    assert pool.refcount[blocks[0]] == 2               # row + tree
+
+    # full match leases every matched block
+    got, clen = cache.match(toks)
+    assert clen == 12 and got == blocks
+    assert pool.refcount[blocks[0]] == 3               # + the lease
+    pool.release(got)
+
+    # diverging suffix: longest shared prefix only
+    got, clen = cache.match(toks[:8] + [7, 7, 7, 7])
+    assert clen == 8 and got == blocks[:2]
+    pool.release(got)
+
+    # miss takes no lease and counts no hit
+    hits = cache.hits
+    got, clen = cache.match([1, 2, 3, 4])
+    assert got == [] and clen == 0 and cache.hits == hits
+
+    # partial trailing chunk: first r positions of a cached block
+    got, clen = cache.match(toks[:10])
+    assert clen == 10 and got == blocks
+    pool.release(got)
+    # ...but only when the partial tokens agree
+    got, clen = cache.match(toks[:8] + [7, 7])
+    assert clen == 8 and got == blocks[:2]
+    pool.release(got)
+
+    # idempotent re-insert pins nothing new
+    assert cache.insert(toks, blocks) == 0
+    assert cache.n_cached_blocks == 3
+
+
+def test_insert_skips_partial_trailing_block(tiny_cfg):
+    pool = KVPool(tiny_cfg, n_blocks=16, block_size=4)
+    cache = PrefixCache(pool)
+    blocks = pool.alloc(3)
+    assert cache.insert(list(range(10)), blocks) == 2  # 10 tokens: 2 full
+    assert cache.n_cached_blocks == 2
+    assert pool.refcount[blocks[2]] == 1               # tail never pinned
+
+
+def test_lru_eviction_frees_leaves_only(tiny_cfg):
+    pool = KVPool(tiny_cfg, n_blocks=32, block_size=4)
+    cache = PrefixCache(pool)
+    shared = list(range(8))
+    a = pool.alloc(3)     # shared prefix + branch-a leaf
+    b = pool.alloc(3)     # b[0:2] unused (prefix nodes already exist)
+    cache.insert(shared + [20, 21, 22, 23], a)
+    cache.insert(shared + [30, 31, 32, 33], b)
+    # the shared path is deduped: 2 shared nodes + 2 distinct leaves
+    assert cache.n_cached_blocks == 4
+    pool.release(a)
+    pool.release(b)       # b[0]/b[1] free; tree pins a[0..2] + b[2]
+    assert pool.blocks_in_use == cache.n_cached_blocks
+
+    # touch branch b so branch a's leaf becomes LRU
+    got, _ = cache.match(shared + [30, 31, 32, 33])
+    pool.release(got)
+    freed = cache.evict(1)
+    assert freed == 1
+    got, clen = cache.match(shared + [20, 21, 22, 23])
+    assert clen == 8      # a's unique leaf gone, shared prefix alive
+    pool.release(got)
+    got, clen = cache.match(shared + [30, 31, 32, 33])
+    assert clen == 12     # b untouched (recently used)
+    pool.release(got)
+
+
+def test_evict_skips_blocks_leased_to_live_rows(tiny_cfg):
+    pool = KVPool(tiny_cfg, n_blocks=16, block_size=4)
+    cache = PrefixCache(pool)
+    blocks = pool.alloc(2)
+    cache.insert(list(range(8)), blocks)
+    pool.release(blocks)                       # rows done: tree-only pins
+    leased, clen = cache.match(list(range(8)))  # a "live row" leases them
+    assert clen == 8
+    assert cache.evict(2) == 0                 # nothing evictable: leased
+    pool.release(leased)
+    assert cache.evict(2) == 2                 # now both go, leaf first
+    assert cache.n_cached_blocks == 0
+    assert pool.blocks_in_use == 0
+
+
+def test_pressure_hook_and_capacity(tiny_cfg):
+    pool = KVPool(tiny_cfg, n_blocks=9, block_size=4)   # capacity 8
+    cache = PrefixCache(pool, capacity_blocks=2)
+    assert pool.pressure_hook == cache.evict  # registered at construction
+    b = pool.alloc(4)
+    # capacity cap: only 2 of 4 full blocks get pinned
+    assert cache.insert(list(range(16)), b) == 2
+    assert cache.n_cached_blocks == 2
+    pool.release(b)
+    assert pool.blocks_in_use == 2
+    # pool pressure evicts through the hook: reserve() reclaims the 2
+    # cached blocks instead of failing
+    assert pool.reserve(8)
+    assert cache.n_cached_blocks == 0
+    assert pool.free_blocks == 8
+    got = pool.alloc(8)
+    pool.release(got)
+
+
+def test_clear_and_cached_block_ids(tiny_cfg):
+    pool = KVPool(tiny_cfg, n_blocks=16, block_size=4)
+    cache = PrefixCache(pool)
+    b = pool.alloc(3)
+    cache.insert(list(range(12)), b)
+    pool.release(b)
+    assert cache.cached_block_ids() == set(b)
+    assert cache.clear() == 3
+    assert pool.blocks_in_use == 0 and cache.n_cached_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine-level partial prefill parity
+# ---------------------------------------------------------------------------
+
+
+def _full_then_partial(eng, prompt, clen, n_steps, seed=0):
+    """Full prefill+decode of ``prompt``, then a partial prefill reusing
+    the full row's first blocks as the cached prefix.  Returns (reference
+    logits/tokens, partial logits/tokens)."""
+    plen = len(prompt)
+    toks = jnp.asarray(prompt)[None]
+    full = eng.prefill(toks, jnp.array([plen], jnp.int32))
+    ref_logits = np.asarray(full.pending_logits)
+    full, ref_out = eng.generate(full, n_steps, jax.random.key(seed), GREEDY,
+                                 stop_ids=NO_STOP)
+    table = np.asarray(jax.device_get(full.cache["table"]))
+    nblk = blocks_for(clen, eng.pool.block_size)
+    cached = table[0, :nblk]
+    eng.pool.retain(cached)      # the lease PrefixCache.match would take
+    suffix = prompt[clen:]
+    st = eng.prefill(jnp.asarray(suffix)[None],
+                     jnp.array([len(suffix)], jnp.int32),
+                     cached_table=cached[None],
+                     cached_lens=np.array([clen]))
+    part_logits = np.asarray(st.pending_logits)
+    st, part_out = eng.generate(st, n_steps, jax.random.key(seed), GREEDY,
+                                stop_ids=NO_STOP)
+    eng.release_rows(full, [0])
+    eng.release_rows(st, [0])
+    return (ref_logits, np.asarray(ref_out)), (part_logits,
+                                               np.asarray(part_out))
+
+
+def test_partial_prefill_parity_aligned_and_misaligned(trained_tiny,
+                                                       tiny_cfg, tok):
+    """The acceptance split classes on one block size: block-aligned,
+    misaligned mid-block, and the all-but-last-token split."""
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, block_size=8)
+    prompt = tok.encode("Q:33+44=?R:33+44=77.A:")
+    for clen in (8, 16, 11, len(prompt) - 1):
+        (rl, rt), (pl, pt) = _full_then_partial(eng, prompt, clen, 8)
+        np.testing.assert_allclose(pl, rl, atol=ATOL)
+        np.testing.assert_array_equal(pt, rt)
+        assert eng.pool.blocks_in_use == 0
+
+
+@pytest.mark.slow
+def test_partial_prefill_parity_full_grid(trained_tiny, tiny_cfg, tok):
+    """Every block size x split-point class, decode crossing block
+    boundaries, against both the paged full prefill and the dense
+    engine."""
+    dense = DecodeEngine(trained_tiny, tiny_cfg, max_len=64,
+                         eos_id=tok.eos_id, pad_id=tok.pad_id)
+    prompt = tok.encode("Q:15+26=?R:15+26=41.A:")
+    plen = len(prompt)
+    for block_size in (4, 8, 16):
+        eng = paged_engine(trained_tiny, tiny_cfg, tok,
+                           block_size=block_size, n_blocks=128)
+        sd = dense.prefill(jnp.asarray(prompt)[None],
+                           jnp.array([plen], jnp.int32))
+        dense_logits = np.asarray(sd.pending_logits)
+        _, dense_out = dense.generate(sd, 2 * block_size + 3,
+                                      jax.random.key(1), GREEDY,
+                                      stop_ids=NO_STOP)
+        splits = {block_size, 2 * block_size, block_size + 1,
+                  block_size // 2, plen - 1}
+        for clen in sorted(c for c in splits if 0 < c < plen):
+            (rl, rt), (pl, pt) = _full_then_partial(
+                eng, prompt, clen, 2 * block_size + 3, seed=1)
+            np.testing.assert_allclose(pl, rl, atol=ATOL)
+            np.testing.assert_array_equal(pt, rt)
+            np.testing.assert_allclose(pl, dense_logits, atol=ATOL)
+            np.testing.assert_array_equal(pt, np.asarray(dense_out))
+            assert eng.pool.blocks_in_use == 0
+
+
+def test_partial_prefill_validates_inputs(trained_tiny, tiny_cfg, tok):
+    dense = DecodeEngine(trained_tiny, tiny_cfg, max_len=64,
+                         eos_id=tok.eos_id, pad_id=tok.pad_id)
+    with pytest.raises(ValueError):
+        dense.prefill(jnp.ones((1, 4), jnp.int32),
+                      cached_table=np.zeros((1, 1), np.int32),
+                      cached_lens=np.array([8]))
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, block_size=8)
+    st = eng.prefill(jnp.asarray(tok.encode("Q:1+2=?A:"))[None])
+    table = np.asarray(jax.device_get(st.cache["table"]))
+    with pytest.raises(ValueError):  # zero-token suffix
+        eng.prefill(jnp.ones((1, 4), jnp.int32),
+                    lengths=jnp.array([0], jnp.int32),
+                    cached_table=table[:, :1], cached_lens=np.array([8]))
+    with pytest.raises(ValueError):  # overruns usable length
+        eng.prefill(jnp.ones((1, 60), jnp.int32),
+                    cached_table=table[:, :1], cached_lens=np.array([8]))
+    eng.release_rows(st, [0])
+    assert eng.pool.blocks_in_use == 0
+
+
+def test_partial_prefill_out_of_blocks_is_atomic(trained_tiny, tiny_cfg,
+                                                 tok):
+    """A failed partial prefill must leave the pool untouched (the
+    caller's lease included) — the scheduler retries or waits."""
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, block_size=8,
+                       n_blocks=4)  # capacity 3
+    prompt = tok.encode("Q:33+44=?A:")  # 12 tokens -> 2 blocks
+    st = eng.prefill(jnp.asarray(prompt)[None])
+    table = np.asarray(jax.device_get(st.cache["table"]))
+    cached = table[0, :1]
+    eng.pool.retain(cached)
+    rc = eng.pool.refcount.copy()
+    with pytest.raises(OutOfBlocks):
+        # suffix needs 2 fresh blocks + nothing free (1 block left, lease
+        # on block 0 held): must fail before any retain/cow/alloc
+        eng.prefill(jnp.asarray(prompt[8:] + prompt)[None],
+                    cached_table=cached[None], cached_lens=np.array([8]))
+    np.testing.assert_array_equal(eng.pool.refcount, rc)
+    eng.pool.release(cached)
+    eng.release_rows(st, [0])
+    assert eng.pool.blocks_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler integration
+# ---------------------------------------------------------------------------
+
+HEADER = "Q:1+2=?A:3.Q:4+5=?A:9.Q:7+2=?A:9."
+
+
+def _sched(engine, cache, prompt_len=56, n_slots=3):
+    return ContinuousScheduler(engine, n_slots=n_slots,
+                               prompt_len=prompt_len, stop_ids=NO_STOP,
+                               prefix_cache=cache)
+
+
+def _submit_all(sched, tok, questions, max_new=5, header=HEADER):
+    for i, q in enumerate(questions):
+        sched.submit(Request(req_id=i,
+                             prompt=jnp.asarray(tok.encode(header + q)),
+                             max_new_tokens=max_new))
+
+
+QUESTIONS = ["Q:1+2=?A:", "Q:3+4=?A:", "Q:5+6=?A:", "Q:7+8=?A:",
+             "Q:2+9=?A:"]
+
+
+def _run_workload(trained_tiny, tiny_cfg, tok, *, cache_on, n_blocks=97,
+                  capacity=None):
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, max_len=96,
+                       block_size=8, n_blocks=n_blocks)
+    cache = (PrefixCache(eng.pool, capacity_blocks=capacity)
+             if cache_on else None)
+    sched = _sched(eng, cache)
+    _submit_all(sched, tok, QUESTIONS)
+    res = sched.run(jax.random.key(0), GREEDY)
+    return res, sched, eng, cache
+
+
+def test_scheduler_cache_hits_save_prefill_at_identical_outputs(
+        trained_tiny, tiny_cfg, tok):
+    res0, s0, e0, _ = _run_workload(trained_tiny, tiny_cfg, tok,
+                                    cache_on=False)
+    res1, s1, e1, cache = _run_workload(trained_tiny, tiny_cfg, tok,
+                                        cache_on=True)
+    assert res0 == res1  # greedy streams are bit-identical
+    m0, m1 = s0.metrics.summary(), s1.metrics.summary()
+    # every request after the first hits the shared header
+    assert m1["prefix_cache_lookups"] == len(QUESTIONS)
+    assert m1["prefix_cache_hits"] == len(QUESTIONS) - 1
+    assert m1["prefix_cache_hit_rate"] == pytest.approx(0.8)
+    assert m1["prefill_tokens_saved"] > 0
+    assert (m1["prefill_tokens"] + m1["prefill_tokens_saved"]
+            == m0["prefill_tokens"])
+    # the shared-header workload clears the acceptance bar
+    assert m1["prefill_tokens"] <= 0.5 * m0["prefill_tokens"]
+    assert cache.stats()["hit_rate"] == pytest.approx(0.8)
+
+
+def test_tts_group_partial_prefill_fork_parity(trained_tiny, tiny_cfg, tok):
+    """A Best-of-N group admitted over a cached header: one partial
+    prefill, fork, streams match the uncached group's streams."""
+
+    def run(cache_on):
+        eng = paged_engine(trained_tiny, tiny_cfg, tok, max_len=96,
+                           block_size=8, n_blocks=97)
+        cache = PrefixCache(eng.pool) if cache_on else None
+        sched = _sched(eng, cache, n_slots=4)
+        sched.submit(Request(req_id=0,
+                             prompt=jnp.asarray(tok.encode(
+                                 HEADER + "Q:6+3=?A:")),
+                             max_new_tokens=4))
+        sched.submit(Request(req_id=1,
+                             prompt=jnp.asarray(tok.encode(
+                                 HEADER + "Q:5+4=?A:")),
+                             max_new_tokens=6, n_samples=3))
+        res = sched.run(jax.random.key(0), GREEDY)
+        return res, sched, eng
+
+    res0, _, _ = run(False)
+    res1, s1, e1 = run(True)
+    assert res0 == res1
+    assert len(res1[1]) == 3
+    assert s1.metrics.cache_hits >= 1  # the group hit req 0's header
+
+
+def test_eviction_then_readmission_recomputes_and_matches(trained_tiny,
+                                                          tiny_cfg, tok):
+    """Acceptance: evict a cached prefix, readmit the same prompt (miss,
+    full recompute, re-insert), then admit once more (hit) — all three
+    streams identical."""
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, max_len=96,
+                       block_size=8, n_blocks=97)
+    cache = PrefixCache(eng.pool)
+    prompt = HEADER + "Q:5+6=?A:"
+    streams = []
+    for trial in range(3):
+        sched = _sched(eng, cache)
+        sched.submit(Request(req_id=trial,
+                             prompt=jnp.asarray(tok.encode(prompt)),
+                             max_new_tokens=5))
+        streams.append(sched.run(jax.random.key(0), GREEDY)[trial])
+        if trial == 0:
+            assert cache.n_cached_blocks > 0
+            evicted = cache.evict(cache.n_cached_blocks)
+            assert evicted > 0 and cache.n_cached_blocks == 0
+            assert eng.pool.blocks_in_use == 0
+    assert streams[0] == streams[1] == streams[2]
+    # trial 1 missed (cache was empty), trial 2 hit the re-inserted prefix
+    assert cache.hits >= 1 and cache.evictions >= 1
+    assert eng.pool.blocks_in_use == cache.n_cached_blocks
+
+
+def test_pool_pressure_evicts_cache_before_preempting(trained_tiny,
+                                                      tiny_cfg, tok):
+    """A pool sized so the cached header + live rows cannot coexist: the
+    pressure hook must reclaim cached blocks (evictions > 0) and the
+    drain still completes with reference outputs."""
+    res_ref, _, _, _ = _run_workload(trained_tiny, tiny_cfg, tok,
+                                     cache_on=False, n_blocks=97)
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, max_len=96,
+                       block_size=8, n_blocks=9)  # deliberately starved
+    cache = PrefixCache(eng.pool)
+    sched = _sched(eng, cache, n_slots=2)
+    _submit_all(sched, tok, QUESTIONS)
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert res == res_ref
+    assert cache.evictions > 0
+    assert eng.pool.blocks_in_use == cache.n_cached_blocks
+
+
+@pytest.mark.slow
+def test_scheduler_parity_grid_with_eviction_churn(trained_tiny, tiny_cfg,
+                                                   tok):
+    """Shared-header workloads across block sizes and starved/roomy pools:
+    outputs must match the uncached reference everywhere, including runs
+    that interleave eviction and preemption."""
+    res_ref, _, _, _ = _run_workload(trained_tiny, tiny_cfg, tok,
+                                     cache_on=False)
+    for block_size in (4, 8, 16):
+        wc = blocks_for(96, block_size)  # worst-case one-request footprint
+        for n_blocks in (wc + wc // 2 + 1, 6 * (96 // block_size) + 1):
+            eng = DecodeEngine(trained_tiny, tiny_cfg, max_len=96,
+                               eos_id=tok.eos_id, pad_id=tok.pad_id,
+                               paged=True, block_size=block_size,
+                               n_blocks=n_blocks)
+            cache = PrefixCache(eng.pool)
+            sched = _sched(eng, cache, n_slots=2)
+            _submit_all(sched, tok, QUESTIONS)
+            res = sched.run(jax.random.key(0), GREEDY)
+            assert res == res_ref, (block_size, n_blocks)
+            assert eng.pool.blocks_in_use == cache.n_cached_blocks
+            rc = eng.pool.refcount
+            assert all(rc[b] == 1 for b in cache.cached_block_ids())
+
+
+def test_prefix_cache_requires_paged_engine(trained_tiny, tiny_cfg, tok):
+    dense = DecodeEngine(trained_tiny, tiny_cfg, max_len=64,
+                         eos_id=tok.eos_id, pad_id=tok.pad_id)
+    paged = paged_engine(trained_tiny, tiny_cfg, tok)
+    other = paged_engine(trained_tiny, tiny_cfg, tok)
+    cache = PrefixCache(other.pool)
+    with pytest.raises(ValueError):
+        ContinuousScheduler(dense, prefix_cache=cache)
+    with pytest.raises(ValueError):  # bound to a different engine's pool
+        ContinuousScheduler(paged, prefix_cache=cache)
+
+
+def test_controller_serving_row_reports_cache_stats(trained_tiny, tiny_cfg,
+                                                    tok):
+    from repro.core import reward as R
+    from repro.core.controller import serve_best_of_n
+    from repro.data import tasks as T
+
+    eng = paged_engine(trained_tiny, tiny_cfg, tok, max_len=96,
+                       block_size=8, n_blocks=97)
+    cache = PrefixCache(eng.pool)
+    tasks = T.shared_prefix_dataset(41, 3, n_shots=2, reasoning=False,
+                                    max_terms=2)
+    row = serve_best_of_n(eng, tok, tasks, n=2, max_tokens=8,
+                          rng=jax.random.key(0), scorer=R.OracleVerifier(),
+                          n_slots=4, prefix_cache=cache)
+    pc = row["serving"]["prefix_cache"]
+    assert pc["lookups"] == 3 and pc["hits"] == 2
+    assert row["serving"]["prefill_tokens_saved"] > 0
+    assert 0.0 <= row["accuracy"] <= 1.0
