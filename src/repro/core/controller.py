@@ -88,7 +88,11 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
         # paged-KV accounting: hbm_saved_bytes = dense reservation minus
         # the *logical* peak block usage, i.e. what a pool right-sized to
         # this workload saves (this run's pool itself physically backs
-        # pool_reserved_bytes regardless of use)
+        # pool_reserved_bytes regardless of use).  peak_bytes_in_use is
+        # dtype-aware (block_bytes measures the device leaves), so a
+        # quantized pool (stats()["kv_quant"] of "q8"/"q4") reports its
+        # compounded paged × quantization saving against the fp dense
+        # baseline here.
         from repro.serving.kv_pool import dense_kv_bytes
 
         serving["kv"] = engine.pool.stats()

@@ -87,18 +87,21 @@ def paged_flash_decode(q, k_pool, v_pool, table, cache_len, *,
                        window: int = 0, softcap: float = 0.0):
     """Paged decode attention through the block-table-walking kernel.
 
-    q: (B, 1, Hq, D); pools: (n_blocks, bs, Hkv, D); table: (B, W) int32;
-    cache_len: (B,) int32 including the current token.  Returns
+    q: (B, 1, Hq, D); pools: (n_blocks, bs, Hkv, D) fp arrays *or*
+    tile-quantized {"codes", "scales"} leaf dicts (``repro.serving.
+    kv_quant``), which route to the fused-dequant kernel; table: (B, W)
+    int32; cache_len: (B,) int32 including the current token.  Returns
     (B, 1, Hq, D) in q.dtype — drop-in for ``layers.paged_decode_attention``
     (the XLA gather fallback) on the TPU hot path.
     """
     B, _, Hq, D = q.shape
-    Hkv = k_pool.shape[2]
+    quantized = isinstance(k_pool, dict)
+    Hkv = (k_pool["codes"] if quantized else k_pool).shape[2]
     G = Hq // Hkv
     qg = q.reshape(B, Hkv, G, D)
-    o = _paged.paged_attention(qg, k_pool, v_pool, table, cache_len,
-                               window=window, softcap=softcap,
-                               interpret=INTERPRET)
+    fn = _paged.quant_paged_attention if quantized else _paged.paged_attention
+    o = fn(qg, k_pool, v_pool, table, cache_len, window=window,
+           softcap=softcap, interpret=INTERPRET)
     return o.reshape(B, 1, Hq, D)
 
 

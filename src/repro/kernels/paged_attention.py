@@ -19,6 +19,17 @@ paged kernel is about the memory layout; the LUT-exp FP16 variant lives in
 ``lut_softmax_attention``.  The identical-semantics XLA fallback used on
 CPU is ``repro.models.layers.paged_decode_attention``; the pure-jnp oracle
 is ``repro.kernels.ref.paged_decode_attention_ref``.
+
+:func:`quant_paged_attention` is the same walk over a *tile-quantized*
+pool (``repro.serving.kv_quant``): the BlockSpec index maps dereference
+the table for the codes **and** the per-(2, 16)-tile scales — both
+unit-stride by construction, the §5.1 layout story applied to KV — and
+dequantization happens per block in VMEM (int8 scale-multiply for Q8, a
+16-entry codebook gather for packed Q4, the vlut16 analogue) right before
+the Q·Kᵀ dot.  HBM traffic per step is therefore the *quantized* live KV:
+the paged saving and the quantization saving compound.  Oracle:
+``ref.quant_paged_decode_attention_ref``; XLA fallback: the same
+``layers.paged_decode_attention`` dispatching on the pool's leaf dicts.
 """
 from __future__ import annotations
 
@@ -123,3 +134,139 @@ def paged_attention(q, k_pool, v_pool, table, lengths, *, window: int = 0,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
         interpret=interpret,
     )(table.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-pool variant: per-block VMEM dequant fused into the table walk
+# ---------------------------------------------------------------------------
+
+
+def _dequant_block(codes, scales, cb, *, mode: str, gc: int):
+    """Dequantize one pool block's (bs, Dc) codes with (bs, D//gc) scales
+    to (bs, D) f32.  The head axis is already sliced to one head (codes)
+    and its covering tile row (scales), so the only broadcast left is the
+    cheap unit-stride repeat along dims — no scatter, by construction."""
+    from repro.serving.kv_quant import _unpack_q4
+
+    s = jnp.repeat(scales.astype(jnp.float32), gc, axis=-1)  # (bs, D)
+    if mode == "q8":
+        return codes.astype(jnp.float32) * s
+    idx = _unpack_q4(codes).astype(jnp.int32)
+    return jnp.take(cb, idx, axis=0) * s  # vlut16 analogue (§5.2.2)
+
+
+def _quant_kernel(table_ref, len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                  cb_ref, o_ref, acc_ref, m_ref, l_ref, *, n_blk: int,
+                  block_size: int, scale: float, window: int, softcap: float,
+                  mode: str, gc: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cb = cb_ref[0]                                   # (16,) f32
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+    k = _dequant_block(kc_ref[0, :, 0], ks_ref[0, :, 0], cb,
+                       mode=mode, gc=gc)             # (bs, D) f32
+    v = _dequant_block(vc_ref[0, :, 0], vs_ref[0, :, 0], cb,
+                       mode=mode, gc=gc)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    seq_len = len_ref[b]
+    q_pos = seq_len - 1
+    kv_pos = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)                       # (G, bs)
+    valid = kv_pos < seq_len
+    if window > 0:
+        valid &= q_pos - kv_pos < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blk - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap",
+                                             "interpret"))
+def quant_paged_attention(q, k_pool, v_pool, table, lengths, *,
+                          window: int = 0, softcap: float = 0.0,
+                          interpret: bool = True):
+    """Paged decode attention over a tile-quantized block pool.
+
+    q: (B, Hkv, G, D); ``k_pool``/``v_pool``: {"codes", "scales"} leaf
+    dicts per ``repro.serving.kv_quant`` — codes (n_blocks, bs, Hkv, Dc)
+    int8 (q8) or packed uint8 (q4), scales (n_blocks, bs, Hkv//gr, D//gc);
+    table: (B, W) int32 block ids; lengths: (B,) int32 including the
+    current token.  Returns (B, Hkv, G, D) in q.dtype.  Geometry is
+    inferred from the leaf shapes (static under jit).
+    """
+    from repro.serving.kv_quant import Q4_CODEBOOK, kv_geometry
+
+    B, Hkv, G, D = q.shape
+    codes = k_pool["codes"]
+    bs = codes.shape[1]
+    dc = codes.shape[-1]
+    mode, gr, gc, _ = kv_geometry(k_pool)
+    sd = k_pool["scales"].shape[-1]                  # D // gc
+    W = table.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    from repro.quant.codebooks import get_codebook
+
+    cb = get_codebook(Q4_CODEBOOK).reshape(1, 16)    # unused under q8
+
+    kern = functools.partial(_quant_kernel, n_blk=W, block_size=bs,
+                             scale=scale, window=window, softcap=softcap,
+                             mode=mode, gc=gc)
+    code_spec = pl.BlockSpec((1, bs, 1, dc),
+                             lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0))
+    # one scale tile row covers gr adjacent heads: head h reads row h//gr,
+    # so the pair's scales stream in once per (h, j) step, unit-stride
+    scale_spec = pl.BlockSpec(
+        (1, bs, 1, sd),
+        lambda b, h, j, tbl, lens: (tbl[b, j], 0, h // gr, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, W),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+            code_spec,
+            scale_spec,
+            code_spec,
+            scale_spec,
+            pl.BlockSpec((1, 16), lambda b, h, j, tbl, lens: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), lengths.astype(jnp.int32), q,
+      k_pool["codes"], k_pool["scales"], v_pool["codes"], v_pool["scales"],
+      cb)

@@ -104,6 +104,23 @@ def paged_decode_attention_ref(q, k_pool, v_pool, table, lengths, *,
     return jnp.einsum("bhgk,bkhd->bhgd", p, v_seq.astype(jnp.float32))
 
 
+def quant_paged_decode_attention_ref(q, k_pool, v_pool, table, lengths, *,
+                                     window: int = 0, softcap: float = 0.0):
+    """Oracle for quant_paged_attention: dequantize the *whole* pool with
+    the reference tile dequantizer (``repro.serving.kv_quant``), then run
+    the fp paged oracle — the kernel's fused per-block VMEM dequant must
+    be invisible next to materialize-then-attend.
+
+    ``k_pool``/``v_pool``: {"codes", "scales"} leaf dicts with per-layer
+    layout (n_blocks, bs, Hkv, Dc) / (n_blocks, bs, Hkv//gr, D//gc).
+    """
+    from repro.serving.kv_quant import dequantize_kv
+
+    return paged_decode_attention_ref(
+        q, dequantize_kv(k_pool), dequantize_kv(v_pool), table, lengths,
+        window=window, softcap=softcap)
+
+
 def attention_f32_ref(q, k, v, *, causal: bool = True):
     """Conventional F32 attention (the paper's Table-5 baseline)."""
     BH, Sq, D = q.shape

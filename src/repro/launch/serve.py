@@ -49,6 +49,13 @@ def main():
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="pool size in blocks for --paged (0 = auto: one "
                          "dense-equivalent reservation per slot)")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "q8", "q4"],
+                    help="store --paged pool blocks tile-quantized (Q8 "
+                         "int8 / Q4 packed codes + per-(2,16)-tile "
+                         "scales) with dequant fused into the paged "
+                         "attention gather — ~4x / ~7x fewer KV bytes "
+                         "than fp32 at matched block count")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="keep completed prompt prefixes pinned in the "
                          "paged KV pool (radix tree, LRU-evicted under "
@@ -94,6 +101,9 @@ def main():
 
     max_len = 256
     kv_kwargs = {}
+    if args.kv_quant != "none" and not args.paged:
+        raise SystemExit("--kv-quant requires --paged (the quantized pool "
+                         "is a block-pool storage layout)")
     if args.paged:
         if max_len % args.block_size:
             raise SystemExit(f"--block-size must divide max_len={max_len}")
@@ -105,7 +115,7 @@ def main():
         n_blocks = args.kv_blocks or (
             1 + rows * (max_len // args.block_size))
         kv_kwargs = dict(paged=True, block_size=args.block_size,
-                         n_blocks=n_blocks)
+                         n_blocks=n_blocks, kv_quant=args.kv_quant)
     engine = DecodeEngine(params, cfg, max_len=max_len, eos_id=tok.eos_id,
                           pad_id=tok.pad_id, **kv_kwargs)
     prefix_cache = None
@@ -151,6 +161,7 @@ def main():
             if "kv" in s:
                 kv = s["kv"]
                 print(f"[serve] paged kv: block_size={kv['block_size']} "
+                      f"kv_quant={kv['kv_quant']} "
                       f"peak_blocks={kv['peak_blocks_in_use']} "
                       f"cow_copies={kv['cow_copies']} "
                       f"peak_bytes={kv['peak_bytes_in_use']} "

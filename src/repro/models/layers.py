@@ -309,17 +309,28 @@ def paged_decode_attention(
     XLA path: gather the row's blocks into a contiguous (B, W*bs, Hkv, D)
     view and reuse :func:`decode_attention` — padding entries point at the
     scratch block and land beyond ``cache_len``, so the standard length
-    mask hides them.  The Pallas kernel (`repro.kernels.paged_attention`)
-    walks the table via scalar prefetch instead of materializing the
-    gather; this is the identical-semantics XLA fallback.
+    mask hides them.  Quantized pools ({"codes", "scales"} leaf dicts,
+    see ``repro.serving.kv_quant``) gather codes and scales through the
+    same table and dequantize the contiguous view before attending.  The
+    Pallas kernel (`repro.kernels.paged_attention`) walks the table via
+    scalar prefetch and dequantizes per block in VMEM instead of
+    materializing the gather; this is the identical-semantics XLA
+    fallback.
     """
+    from repro.serving.kv_quant import dequantize_for_pool, pool_block_size
+
     B = q.shape[0]
     W = table.shape[1]
-    bs = k_pool.shape[1]
-    k_seq = k_pool[table].reshape(B, W * bs, *k_pool.shape[2:])
-    v_seq = v_pool[table].reshape(B, W * bs, *v_pool.shape[2:])
-    return decode_attention(q, k_seq, v_seq, cache_len=cache_len,
-                            window=window, softcap=softcap)
+    bs = pool_block_size(k_pool)
+
+    def gather(pool):
+        seq = jax.tree.map(
+            lambda a: a[table].reshape(B, W * bs, *a.shape[2:]), pool)
+        return dequantize_for_pool(seq)
+
+    return decode_attention(q, gather(k_pool), gather(v_pool),
+                            cache_len=cache_len, window=window,
+                            softcap=softcap)
 
 
 def decode_attention_partial(q, k_cache, v_cache, *, valid, softcap=0.0):
@@ -446,15 +457,23 @@ def attention_block(
         # (table padding) or a position >= the row's usable length, never
         # attended either way (the paged analogue of the dense scratch
         # slot).
+        from repro.serving.kv_quant import pool_block_size, quantize_for_pool
+
         table = cache["table"]
-        bs = cache["k"].shape[1]
+        bs = pool_block_size(cache["k"])
         idx = cache_len - 1  # (B,)
         b_idx = jnp.arange(B)
         blk = table[b_idx, idx // bs]
         off = idx % bs
 
         def upd(pool, new_row):
-            return pool.at[blk, off].set(new_row[:, 0].astype(pool.dtype))
+            # quantize-on-write: the (B, Hkv, D) token slab becomes
+            # code+scale leaves for quantized pools (identity on fp) and
+            # scatters leaf-wise at the same (block, offset)
+            payload = quantize_for_pool(new_row[:, 0], pool)
+            return jax.tree.map(
+                lambda p, x: p.at[blk, off].set(x.astype(p.dtype)),
+                pool, payload)
 
         ck = upd(cache["k"], k)
         cv = upd(cache["v"], v)

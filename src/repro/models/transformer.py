@@ -203,22 +203,41 @@ def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def _quantize_tokens(pool, kvs):
+    """Match prefill KV (L, B, S, Hkv, D) to a pool's storage: identity
+    for fp pools, tile quantize-on-write ({"codes", "scales"} leaves with
+    the same (L, B, S, ...) leading layout) for quantized pools — fused
+    into the same jitted scatter, so fp KV never round-trips through HBM.
+    """
+    from repro.serving.kv_quant import quantize_for_pool
+
+    return quantize_for_pool(kvs, pool)
+
+
 def _scatter_prefill_blocks(pool, kvs, table, block_size: int):
     """Write prefill KV (L, B, S, Hkv, D) into pool blocks via the table.
 
     S is padded up to a block multiple; chunk j of row b goes to block
     ``table[b, j]``.  Chunks past a row's true block count carry padding
     and target the scratch block (table padding = 0), whose contents are
-    never attended.
+    never attended.  Quantized pools scatter the quantized code and scale
+    leaves through the identical index math (the trailing token-slab dims
+    are free).
     """
-    L, B, S = kvs.shape[:3]
-    nS = -(-S // block_size)
-    pad = nS * block_size - S
-    if pad:
-        kvs = jnp.pad(kvs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-    chunks = kvs.reshape(L, B * nS, block_size, *kvs.shape[3:])
-    blocks = table[:, :nS].reshape(-1)
-    return pool.at[:, blocks].set(chunks.astype(pool.dtype))
+    kvs = _quantize_tokens(pool, kvs)
+
+    def leaf(p, x):
+        L, B, S = x.shape[:3]
+        nS = -(-S // block_size)
+        pad = nS * block_size - S
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, pad)) +
+                        ((0, 0),) * (x.ndim - 3))
+        chunks = x.reshape(L, B * nS, block_size, *x.shape[3:])
+        blocks = table[:, :nS].reshape(-1)
+        return p.at[:, blocks].set(chunks.astype(p.dtype))
+
+    return jax.tree.map(leaf, pool, kvs)
 
 
 def _scatter_suffix_blocks(pool, kvs, table, block_size: int, start):
@@ -231,14 +250,22 @@ def _scatter_suffix_blocks(pool, kvs, table, block_size: int, start):
     suffix tokens *inside* a partially-filled tail block whose earlier
     offsets must survive.  Positions past the table's range (padding rows)
     are clamped to the last slot — an un-attended offset or the scratch
-    block, mirroring the dense scratch-slot convention.
+    block, mirroring the dense scratch-slot convention.  Groups of the
+    quantized layout never span tokens, so per-position writes are exact
+    on code+scale leaves too.
     """
-    L, B, S = kvs.shape[:3]
+    kvs = _quantize_tokens(pool, kvs)
     W = table.shape[1]
-    pos = start.astype(jnp.int32)[:, None] + jnp.arange(S, dtype=jnp.int32)
-    pos = jnp.minimum(pos, W * block_size - 1)           # (B, S)
-    blk = jnp.take_along_axis(table, pos // block_size, axis=1)
-    return pool.at[:, blk, pos % block_size].set(kvs.astype(pool.dtype))
+
+    def leaf(p, x):
+        S = x.shape[2]
+        pos = start.astype(jnp.int32)[:, None] + jnp.arange(S,
+                                                            dtype=jnp.int32)
+        pos = jnp.minimum(pos, W * block_size - 1)       # (B, S)
+        blk = jnp.take_along_axis(table, pos // block_size, axis=1)
+        return p.at[:, blk, pos % block_size].set(x.astype(p.dtype))
+
+    return jax.tree.map(leaf, pool, kvs)
 
 
 def prefill(params, tokens, cfg: ModelConfig, par: ParallelContext = None,
@@ -268,7 +295,9 @@ def prefill(params, tokens, cfg: ModelConfig, par: ParallelContext = None,
                              prefix=prefix)
     k, v = kvs  # (L, B, S, Hkv, D)
     if paged is not None:
-        bs = paged["k"].shape[2]
+        from repro.serving.kv_quant import pool_block_size
+
+        bs = pool_block_size(paged["k"], axis=2)
         if prefix is not None:
             start = prefix["len"]
             return logits, {

@@ -62,7 +62,20 @@ insertion of completed prompt prefixes back into the tree, and LRU
 eviction of unreferenced cached blocks under pool pressure (via the
 pool's ``pressure_hook``) *before* falling back to out-of-blocks
 preemption.  ``SchedulerMetrics`` reports the hit rate and the prefill
-tokens the cache saved.
+tokens the cache saved.  The prefix gather is *bucketed*: only the table
+columns covering the batch's longest cached prefix are gathered (block
+granular), not the full ``max_len`` width.
+
+``kv_quant`` ("q8" | "q4", paged only) swaps the pool for a
+:class:`~repro.serving.kv_quant.QuantKVPool`: blocks store tile-quantized
+codes plus per-(2, 16)-tile scales, quantization is fused into the
+prefill/suffix/decode scatters (KV never lands in HBM at full precision)
+and dequantization into every read path — the paged-attention gather, the
+Pallas kernel's per-block VMEM dequant, and the partial-prefill prefix
+gather.  Fork/CoW/prefix-cache semantics are unchanged (blocks move as
+opaque code+scale payloads); the same ``n_blocks`` budget simply costs
+2–4× fewer HBM bytes, or equivalently a fixed byte budget holds
+proportionally more concurrent TTS streams.
 """
 from __future__ import annotations
 
@@ -117,7 +130,8 @@ class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig,
                  par: Optional[ParallelContext] = None, *, max_len: int = 512,
                  eos_id: int = 1, pad_id: int = 0, paged: bool = False,
-                 block_size: int = 16, n_blocks: Optional[int] = None):
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 kv_quant: str = "none"):
         self.params = params
         self.cfg = cfg
         self.par = par
@@ -126,7 +140,11 @@ class DecodeEngine:
         self.pad_id = pad_id
         self.model = api.get_model(cfg)
         self.paged = paged
+        self.kv_quant = kv_quant
         self.pool: Optional[KVPool] = None
+        if kv_quant != "none" and not paged:
+            raise ValueError("kv_quant requires the paged KV layout "
+                             "(DecodeEngine(paged=True))")
         if paged:
             if cfg.family != "transformer":
                 raise ValueError(
@@ -140,12 +158,19 @@ class DecodeEngine:
                 # scratch + eight full-length sequences' worth by default;
                 # servers should size this to their slot count / traffic
                 n_blocks = 1 + 8 * (max_len // block_size)
-            self.pool = KVPool(cfg, n_blocks, block_size)
+            if kv_quant != "none":
+                from repro.serving.kv_quant import QuantKVPool
+
+                self.pool = QuantKVPool(cfg, n_blocks, block_size,
+                                        mode=kv_quant)
+            else:
+                self.pool = KVPool(cfg, n_blocks, block_size)
         self._prefill_jit = jax.jit(self._prefill_impl)
         self._prefill_paged_jit = jax.jit(self._prefill_paged_impl,
                                           donate_argnums=(4, 5))
         self._prefill_cached_jit = jax.jit(self._prefill_cached_impl,
-                                           donate_argnums=(5, 6))
+                                           donate_argnums=(5, 6),
+                                           static_argnames=("prefix_w",))
         self._gen_jit = jax.jit(self._generate_impl,
                                 static_argnames=("n_steps", "sc", "stop_ids"))
         self._gen_paged_jit = jax.jit(
@@ -186,18 +211,32 @@ class DecodeEngine:
         return logits, cache["k"], cache["v"]
 
     def _prefill_cached_impl(self, params, tokens, lengths, cached_lens,
-                             table, pool_k, pool_v):
+                             table, pool_k, pool_v, *, prefix_w: int):
         """Partial prefill: gather the rows' cached prefix KV through their
         (already fully planned) block tables, run the transformer over the
         suffix tokens only, and scatter the suffix KV in at the per-row
         offset.  Invalid gather slots (table padding, freshly allocated
-        suffix blocks) are masked inside ``forward`` via ``cached_lens``."""
+        suffix blocks) are masked inside ``forward`` via ``cached_lens``.
+
+        ``prefix_w`` (static) is the *bucketed* gather width: only the
+        first ``ceil(max(cached_lens)/bs)`` table columns are gathered —
+        block-granular, so short cached prefixes stop paying attention
+        FLOPs over the full ``max_len`` table width.  Quantized pools
+        gather code+scale leaves and dequantize the (L, B, P, Hkv, D)
+        prefix view before the transformer consumes it.
+        """
+        from repro.serving.kv_quant import dequantize_for_pool
+
         bs = self.pool.block_size
-        W = table.shape[1]
+        ptab = jax.lax.slice_in_dim(table, 0, prefix_w, axis=1)
 
         def gather(pool):
-            g = pool[:, table]  # (L, B, W, bs, Hkv, D)
-            return g.reshape(g.shape[0], g.shape[1], W * bs, *g.shape[4:])
+            def leaf(a):
+                g = a[:, ptab]  # (L, B, Wc, bs, *slab)
+                return g.reshape(g.shape[0], g.shape[1], prefix_w * bs,
+                                 *g.shape[4:])
+
+            return dequantize_for_pool(jax.tree.map(leaf, pool))
 
         prefix = {"k": gather(pool_k), "v": gather(pool_v),
                   "len": cached_lens}
@@ -297,9 +336,13 @@ class DecodeEngine:
                 have = int(n_full[i] + (1 if rem[i] else 0))
                 table[i, have:n_tot[i]] = self.pool.alloc(int(n_new[i]))
         table_dev = jnp.asarray(table)
+        # bucket the prefix gather to the blocks actually cached (batch
+        # max): recompiles once per distinct width, saves the full
+        # table-width gather + masked attention over max_len prefix slots
+        prefix_w = max(1, int(-(-int(cach_h.max()) // bs)))
         logits, pk, pv = self._prefill_cached_jit(
             self.params, tokens, lengths, jnp.asarray(cach_h, jnp.int32),
-            table_dev, self.pool.k, self.pool.v)
+            table_dev, self.pool.k, self.pool.v, prefix_w=prefix_w)
         self.pool.adopt(pk, pv)
         return GenState(
             cache={"table": table_dev,
@@ -755,6 +798,11 @@ class SchedulerMetrics:
         self.cache_lookups = 0
         self.cache_hits = 0
         self.prefill_tokens_saved = 0
+        # paged KV accounting in *bytes* (dtype-aware: a quantized pool's
+        # blocks are smaller, so block counts alone would overstate its
+        # footprint); updated by the scheduler each step, 0 when dense
+        self.peak_kv_bytes = 0
+        self.kv_quant = "none"
 
     def record(self, rec: StepRecord):
         self.records.append(rec)
@@ -783,6 +831,8 @@ class SchedulerMetrics:
             "prefix_cache_hit_rate": (self.cache_hits / self.cache_lookups
                                       if self.cache_lookups else 0.0),
             "prefill_tokens_saved": self.prefill_tokens_saved,
+            "peak_kv_bytes": self.peak_kv_bytes,
+            "kv_quant": self.kv_quant,
         }
 
 
@@ -860,6 +910,11 @@ class ContinuousScheduler:
         self.completed: dict[int, list[CompletedSample]] = {}
         self._n_samples: dict[int, int] = {}
         self.metrics = SchedulerMetrics(n_slots)
+        if self.paged:
+            # bytes, not blocks-equivalent: quantized pools have smaller
+            # blocks, and this is the number a byte-budgeted operator sizes
+            self._block_bytes = engine.pool.block_bytes()
+            self.metrics.kv_quant = engine.pool.mode
 
     # -- submission ----------------------------------------------------------
     def submit(self, req: Request):
@@ -1176,6 +1231,12 @@ class ContinuousScheduler:
             # freeze the rows so they stop growing until a new occupant
             # overwrites them at admission
             self.state = self.engine.release_rows(self.state, over_budget)
+        if self.paged:
+            # pool.peak_in_use also sees intra-step highs (CoW before
+            # release), so this is the true byte high-water mark
+            self.metrics.peak_kv_bytes = max(
+                self.metrics.peak_kv_bytes,
+                self.engine.pool.peak_in_use * self._block_bytes)
         self.metrics.record(StepRecord(
             step=self.step_count, occupancy=len(live), admitted=admitted,
             prefill_tokens=prefill_tokens))

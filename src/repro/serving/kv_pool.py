@@ -17,6 +17,16 @@ cache into fixed-size *blocks* instead:
   and done rows route their (discarded) decode writes there, mirroring the
   dense engine's ``max_len - 1`` scratch-slot convention.
 
+Device storage is a pytree per leaf: one fp array for the plain pool, or
+{"codes", "scales"} dicts for the tile-quantized pool
+(:class:`~repro.serving.kv_quant.QuantKVPool` — Q8/Q4 codes plus
+per-(2, 16)-tile scales; see that module's docstring for the layout and
+the accuracy-vs-bytes tradeoff).  Everything below the storage layer —
+refcounts, CoW, prefix-cache pinning — moves blocks as opaque payloads,
+so the two layouts share all pool semantics; byte accounting
+(:meth:`KVPool.block_bytes`) measures the actual leaves and is therefore
+dtype-aware.
+
 Accounting (free list, refcounts, peak usage) is host-side — the scheduler
 already syncs per step — while bulk KV bytes only ever move on device
 (block copies via a jitted scatter).  The pool object is *mutable shared
@@ -59,24 +69,34 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
 
 @partial(jax.jit, donate_argnums=(0, 1))
 def _copy_blocks(k, v, src, dst):
-    """Device copy of whole blocks (CoW commit): pool[:, dst] = pool[:, src]."""
-    return k.at[:, dst].set(k[:, src]), v.at[:, dst].set(v[:, src])
+    """Device copy of whole blocks (CoW commit): pool[:, dst] = pool[:, src].
+
+    ``k``/``v`` are pytrees: one fp array each for the plain pool, or
+    {"codes", "scales"} leaf dicts for the quantized pool
+    (:class:`~repro.serving.kv_quant.QuantKVPool`) — every leaf carries
+    blocks on axis 1, so one tree-mapped scatter moves whole payloads and
+    CoW semantics are identical for code+scale blocks."""
+
+    def cp(a):
+        return a.at[:, dst].set(a[:, src])
+
+    return jax.tree.map(cp, k), jax.tree.map(cp, v)
 
 
 class KVPool:
     """Refcounted block pool backing every paged sequence of one engine."""
+
+    mode = "none"  # KV storage quantization (QuantKVPool overrides)
 
     def __init__(self, cfg: ModelConfig, n_blocks: int, block_size: int,
                  dtype=None):
         if n_blocks < 2:
             raise ValueError("KVPool needs >= 2 blocks (block 0 is the "
                              "reserved scratch block)")
-        from repro.models.transformer import init_paged_cache
-
         self.cfg = cfg
         self.n_blocks = n_blocks
         self.block_size = block_size
-        storage = init_paged_cache(cfg, n_blocks, block_size, dtype)
+        storage = self._init_storage(cfg, n_blocks, block_size, dtype)
         self.k = storage["k"]
         self.v = storage["v"]
         self.refcount = np.zeros((n_blocks,), np.int32)
@@ -90,6 +110,14 @@ class KVPool:
         # are reclaimed *before* allocation failures escalate to scheduler
         # preemption.  Must only release blocks it owns a reference to.
         self.pressure_hook: Optional[Callable[[int], int]] = None
+
+    def _init_storage(self, cfg: ModelConfig, n_blocks: int,
+                      block_size: int, dtype) -> dict:
+        """Device storage for the pool; subclasses swap the leaf layout
+        (the quantized pool stores code+scale dicts per leaf)."""
+        from repro.models.transformer import init_paged_cache
+
+        return init_paged_cache(cfg, n_blocks, block_size, dtype)
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -106,10 +134,13 @@ class KVPool:
         return self.n_blocks - 1
 
     def block_bytes(self) -> int:
-        """HBM bytes of one block across all layers (K + V)."""
-        per = self.cfg.n_layers * self.block_size * self.cfg.n_kv_heads
-        per *= self.cfg.resolved_head_dim() * self.k.dtype.itemsize
-        return 2 * per
+        """HBM bytes of one block across all layers (K + V), measured on
+        the actual device leaves — dtype- and layout-aware, so the
+        quantized pool's code+scale blocks report their true (smaller)
+        footprint and ``peak_bytes``/``hbm_saved`` stay honest."""
+        total = sum(leaf.nbytes
+                    for leaf in jax.tree_util.tree_leaves((self.k, self.v)))
+        return total // self.n_blocks
 
     def reset_peak(self):
         """Start a fresh peak-tracking interval.
@@ -133,6 +164,7 @@ class KVPool:
         return {
             "n_blocks": self.n_blocks,
             "block_size": self.block_size,
+            "kv_quant": self.mode,
             "blocks_in_use": self.blocks_in_use,
             "peak_blocks_in_use": self.peak_in_use,
             "free_blocks": self.free_blocks,

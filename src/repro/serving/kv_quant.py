@@ -1,0 +1,240 @@
+"""Quantized KV block pool: tile-quantized Q8/Q4 blocks over the paged pool.
+
+The paper's §5.1 tile quantization and §5.2 LUT dequantization are applied
+to *weights* elsewhere in this repo (``repro.quant.tile_quant``,
+``kernels/lut_dequant_gemm``).  This module applies the same geometry to
+the KV cache — the actual memory ceiling for Best-of-N serving on a fixed
+hardware budget: a :class:`QuantKVPool` is a drop-in for
+:class:`~repro.serving.kv_pool.KVPool` whose ``k``/``v`` device leaves
+store Q8 or packed Q4 *codes* plus per-tile *scales* instead of fp values.
+
+Tile-scale layout
+-----------------
+One token's KV slab is an ``(Hkv, D)`` matrix written atomically (prefill
+scatters whole tokens; a decode step writes one token per row).  Groups
+therefore never span tokens — quantize-on-write never re-touches old KV —
+and within the slab they follow the paper's register-tile geometry
+(Fig. 4a mapped exactly as ``tile_quant`` maps it for weights):
+
+* a group is a ``(gr, gc)`` rectangle of ``gr = 2`` adjacent KV heads ×
+  ``gc = group_size // 2 = 16`` contiguous head dims — the (2, 16)
+  sub-tile of the HMX layout, a lane-contiguous strip of a VREG tile;
+* per leaf and block the storage is::
+
+      codes : (n_blocks, bs, Hkv, D)      int8          (q8)
+              (n_blocks, bs, Hkv, D//2)   uint8 packed  (q4, two codes per
+                                          byte along D, low nibble = even)
+      scales: (n_blocks, bs, Hkv//gr, D//gc)  float16
+
+  so a block-table gather of codes *and* scales is unit-stride in both —
+  the Fig. 6 scatter mismatch is designed away for KV exactly as for
+  weights (dequant = one cheap repeat along heads + one along dims);
+* q8 codes are symmetric ints (``clip(round(x/s), -127, 127)``,
+  ``s = absmax/127``); q4 codes index the ``q4_0`` 16-entry codebook
+  (``repro.quant.codebooks``), dequantized via the same LUT story as the
+  weight kernels.
+
+Configs with an odd ``Hkv`` fall back to ``gr = 1`` (scales per head); a
+``D`` not divisible by 16 halves ``gc`` until it divides.  All shape
+metadata is recoverable from the leaf shapes/dtypes alone
+(:func:`kv_geometry`), so every consumer — the engine's scatter jits, the
+XLA gather fallback, the Pallas kernel — stays shape-polymorphic with no
+static spec threading.
+
+Accuracy vs bytes (measured by ``benchmarks/serving_scaling.py
+--kv-quant``, trained tiny model, greedy Best-of-N math workload,
+float32 fp baseline):
+
+==========  ==================  =====================  ==================
+mode        bytes per KV value  peak-KV-byte reduction greedy accuracy
+==========  ==================  =====================  ==================
+fp (f32)    4.0                 —                      baseline
+q8          1.0625 (1 + 2/32)   ~73%                   == baseline
+q4          0.5625 (0.5 + 2/32) ~86%                   <= 1 task drop
+==========  ==================  =====================  ==================
+
+Copy-on-write, fork refcounts and prefix-cache pinning operate on *block
+ids* and move whole blocks, so they compose unchanged over code+scale
+payloads — :meth:`KVPool.cow` device-copies every leaf of a block via the
+same tree-mapped scatter, and the radix tree pins quantized blocks exactly
+like fp ones.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.codebooks import codebook_absmax, get_codebook
+from repro.serving.kv_pool import KVPool
+
+KV_QUANT_MODES = ("none", "q8", "q4")
+# the q4 codebook is fixed (the symmetric integer grid): KV statistics are
+# near-gaussian but the write path must be cheap — nearest-entry over an
+# affine grid is a round, not a 16-way argmin
+Q4_CODEBOOK = "q4_0"
+
+
+def kv_tile_geometry(n_kv_heads: int, head_dim: int,
+                     group_size: int = 32) -> tuple[int, int]:
+    """(gr, gc) tile shape for an ``(Hkv, D)`` token slab.
+
+    Canonical shape is ``(2, group_size // 2)`` — the paper's register
+    tile; odd head counts drop to one head per tile and a non-dividing
+    head dim halves ``gc`` until it divides."""
+    gr = 2 if n_kv_heads % 2 == 0 else 1
+    gc = max(1, group_size // 2)
+    while head_dim % gc:
+        gc //= 2
+    return gr, gc
+
+
+def kv_geometry(leaf: dict) -> tuple[str, int, int, int]:
+    """Recover (mode, gr, gc, head_dim) from a quantized leaf's shapes.
+
+    ``leaf`` is {"codes", "scales"} with token-slab trailing dims
+    ``codes (..., Hkv, Dc)`` / ``scales (..., Hkv//gr, D//gc)``.
+    """
+    codes, scales = leaf["codes"], leaf["scales"]
+    mode = "q8" if codes.dtype == jnp.int8 else "q4"
+    hkv = codes.shape[-2]
+    d = codes.shape[-1] * (2 if mode == "q4" else 1)
+    gr = hkv // scales.shape[-2]
+    gc = d // scales.shape[-1]
+    return mode, gr, gc, d
+
+
+def _pack_q4(codes: jnp.ndarray) -> jnp.ndarray:
+    """(..., D) uint8 in [0,15] -> (..., D//2): low nibble = even dim."""
+    return (codes[..., 0::2] | (codes[..., 1::2] << 4)).astype(jnp.uint8)
+
+
+def _unpack_q4(packed: jnp.ndarray) -> jnp.ndarray:
+    """(..., D//2) uint8 -> (..., D) uint8 in [0,15]."""
+    lo = packed & 0xF
+    hi = packed >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1],
+                                                packed.shape[-1] * 2)
+
+
+def _tile_scales(x: jnp.ndarray, gr: int, gc: int):
+    """Per-(gr, gc)-tile absmax of (..., H, D) -> (..., H//gr, D//gc)."""
+    *lead, H, D = x.shape
+    t = x.reshape(*lead, H // gr, gr, D // gc, gc)
+    return jnp.max(jnp.abs(t), axis=(-3, -1))
+
+
+def _broadcast_scales(scales: jnp.ndarray, gr: int, gc: int) -> jnp.ndarray:
+    """(..., H//gr, D//gc) f32 -> (..., H, D): the two cheap repeats."""
+    return jnp.repeat(jnp.repeat(scales, gr, axis=-2), gc, axis=-1)
+
+
+def quantize_kv(x: jnp.ndarray, *, mode: str, gr: int, gc: int,
+                scale_dtype=jnp.float16) -> dict:
+    """Tile-quantize KV values.  x: (..., Hkv, D) fp; the trailing two
+    dims are one token's slab (leading dims are free: (L, B, S, ...) for
+    prefill scatters, (B, ...) for the per-step decode write).
+
+    Returns {"codes", "scales"} in the pool leaf layout (see module
+    docstring).  Pure jnp and shape-polymorphic: fuses into the engine's
+    jitted scatter paths.
+    """
+    assert mode in ("q8", "q4"), mode
+    xf = x.astype(jnp.float32)
+    qmax = 127.0 if mode == "q8" else codebook_absmax(Q4_CODEBOOK)
+    scales = (_tile_scales(xf, gr, gc) / qmax).astype(scale_dtype)
+    sc = jnp.maximum(_broadcast_scales(scales.astype(jnp.float32), gr, gc),
+                     1e-8)
+    wn = xf / sc
+    if mode == "q8":
+        codes = jnp.clip(jnp.round(wn), -127, 127).astype(jnp.int8)
+    else:
+        # q4_0 is the affine grid [-8, 7]: nearest entry == shifted round
+        codes = (jnp.clip(jnp.round(wn), -8, 7) + 8).astype(jnp.uint8)
+        codes = _pack_q4(codes)
+    return {"codes": codes, "scales": scales}
+
+
+def dequantize_kv(q: dict, *, dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of :func:`quantize_kv` (reference / XLA-fallback dequant).
+
+    Leading dims are free, so this serves the per-block kernel oracle,
+    the gathered (B, S, Hkv, D) decode path and the (L, B, P, Hkv, D)
+    prefix gather alike."""
+    mode, gr, gc, _ = kv_geometry(q)
+    if mode == "q8":
+        vals = q["codes"].astype(jnp.float32)
+    else:
+        idx = _unpack_q4(q["codes"]).astype(jnp.int32)
+        vals = get_codebook(Q4_CODEBOOK)[idx]  # 16-entry LUT (§5.2.2)
+    sc = _broadcast_scales(q["scales"].astype(jnp.float32), gr, gc)
+    return (vals * sc).astype(dtype)
+
+
+def quantize_for_pool(x: jnp.ndarray, pool_leaf) -> jnp.ndarray | dict:
+    """Quantize ``x`` to match a pool leaf's storage (identity on fp
+    pools) — the single write-path hook the scatter sites call."""
+    if not isinstance(pool_leaf, dict):
+        return x
+    mode, gr, gc, _ = kv_geometry(pool_leaf)
+    return quantize_kv(x, mode=mode, gr=gr, gc=gc,
+                       scale_dtype=pool_leaf["scales"].dtype)
+
+
+def dequantize_for_pool(gathered) -> jnp.ndarray:
+    """Dequantize a gathered pool view (identity on fp pools) — the
+    single read-path hook for XLA gather fallbacks."""
+    if not isinstance(gathered, dict):
+        return gathered
+    return dequantize_kv(gathered)
+
+
+def pool_block_size(pool_leaf, axis: int = 1) -> int:
+    """Token block size of a pool leaf (fp array or quantized dict):
+    ``axis`` 1 of a per-layer (n_blocks, bs, ...) leaf, 2 of a stacked
+    (L, n_blocks, bs, ...) one."""
+    leaf = pool_leaf["codes"] if isinstance(pool_leaf, dict) else pool_leaf
+    return leaf.shape[axis]
+
+
+class QuantKVPool(KVPool):
+    """Refcounted block pool whose blocks store tile-quantized KV.
+
+    Drop-in for :class:`~repro.serving.kv_pool.KVPool`: every host-side
+    operation (alloc/retain/release, CoW, pressure hook, prefix-cache
+    pinning) is inherited unchanged because blocks move as opaque
+    code+scale payloads; only the device storage and the byte accounting
+    differ.  ``mode``: "q8" (int8 codes) or "q4" (packed q4_0 codes),
+    both with per-(2, 16)-tile float16 scales.
+    """
+
+    def __init__(self, cfg, n_blocks: int, block_size: int, *,
+                 mode: str = "q8", group_size: int = 32,
+                 scale_dtype=jnp.float16):
+        if mode not in ("q8", "q4"):
+            raise ValueError(f"kv_quant mode must be q8 or q4, got {mode!r}")
+        hd = cfg.resolved_head_dim()
+        if mode == "q4" and hd % 2:
+            raise ValueError(f"q4 KV packing needs an even head_dim "
+                             f"(got {hd})")
+        self.mode = mode
+        self.group_size = group_size
+        self.scale_dtype = jnp.dtype(scale_dtype)
+        self.gr, self.gc = kv_tile_geometry(cfg.n_kv_heads, hd, group_size)
+        super().__init__(cfg, n_blocks, block_size)
+
+    def _init_storage(self, cfg, n_blocks: int, block_size: int,
+                      dtype) -> dict:
+        hd = cfg.resolved_head_dim()
+        dc = hd // 2 if self.mode == "q4" else hd
+        code_dtype = jnp.uint8 if self.mode == "q4" else jnp.int8
+        cshape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads, dc)
+        sshape = (cfg.n_layers, n_blocks, block_size,
+                  cfg.n_kv_heads // self.gr, hd // self.gc)
+
+        def leaf():
+            return {"codes": jnp.zeros(cshape, code_dtype),
+                    "scales": jnp.zeros(sshape, self.scale_dtype)}
+
+        return {"k": leaf(), "v": leaf()}

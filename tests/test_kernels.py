@@ -146,6 +146,67 @@ def test_paged_attention_matches_xla_layers_path():
                                atol=2e-5)
 
 
+@pytest.mark.parametrize("mode", ["q8", "q4"])
+@pytest.mark.parametrize("shape", [(2, 14, 4, 2, 4, 6, 32),
+                                   (1, 8, 8, 1, 1, 4, 64),
+                                   (3, 16, 16, 4, 4, 3, 16)])
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (6, 30.0)])
+def test_quant_paged_attention_kernel_vs_oracle(mode, shape, window,
+                                                softcap):
+    """The fused-dequant table walk must match dequantize-the-whole-pool
+    + the fp paged oracle — Q8 scale-multiply and packed-Q4 codebook
+    lookups alike, incl. the gr=1 odd-head-count scale geometry."""
+    from repro.serving import kv_quant as KQ
+
+    B, nb, bs, Hkv, G, W, D = shape
+    rng = np.random.default_rng(B * 100 + bs)
+    q = jax.random.normal(jax.random.fold_in(KEY, 30), (B, Hkv, G, D)) * 0.5
+    gr, gc = KQ.kv_tile_geometry(Hkv, D)
+    pools = []
+    for i in (31, 32):
+        fp = jax.random.normal(jax.random.fold_in(KEY, i),
+                               (nb, bs, Hkv, D)) * 0.5
+        pools.append(KQ.quantize_kv(fp, mode=mode, gr=gr, gc=gc))
+    k_pool, v_pool = pools
+    lens = rng.integers(1, W * bs + 1, size=B).astype(np.int32)
+    lens[0] = W * bs
+    table = np.zeros((B, W), np.int32)
+    avail = list(range(1, nb))
+    for b in range(B):
+        n = -(-int(lens[b]) // bs)
+        table[b, :n] = [avail.pop(rng.integers(len(avail))) for _ in range(n)]
+    table, lens = jnp.asarray(table), jnp.asarray(lens)
+    o = ops.paged_flash_decode(q.reshape(B, 1, Hkv * G, D), k_pool, v_pool,
+                               table, lens, window=window, softcap=softcap)
+    o_ref = ref.quant_paged_decode_attention_ref(
+        q, k_pool, v_pool, table, lens, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(o.reshape(B, Hkv, G, D)),
+                               np.asarray(o_ref), atol=2e-5)
+
+
+def test_quant_paged_attention_matches_xla_layers_path():
+    """Fused-dequant kernel == the model's XLA gather-then-dequant
+    fallback on the exact leaf dicts the quantized decode path carries."""
+    from repro.models.layers import paged_decode_attention
+    from repro.serving import kv_quant as KQ
+
+    B, nb, bs, Hkv, G, W, D = 2, 10, 4, 2, 3, 5, 16
+    q = jax.random.normal(jax.random.fold_in(KEY, 40), (B, 1, Hkv * G, D))
+    k_pool = KQ.quantize_kv(
+        jax.random.normal(jax.random.fold_in(KEY, 41), (nb, bs, Hkv, D)),
+        mode="q8", gr=2, gc=16)
+    v_pool = KQ.quantize_kv(
+        jax.random.normal(jax.random.fold_in(KEY, 42), (nb, bs, Hkv, D)),
+        mode="q8", gr=2, gc=16)
+    table = jnp.array([[1, 2, 3, 0, 0], [4, 5, 6, 7, 8]], jnp.int32)
+    lens = jnp.array([9, 18], jnp.int32)
+    o_kernel = ops.paged_flash_decode(q, k_pool, v_pool, table, lens)
+    o_xla = paged_decode_attention(q, k_pool, v_pool, table=table,
+                                   cache_len=lens)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_xla),
+                               atol=2e-5)
+
+
 @pytest.mark.parametrize("kn", [(128, 256), (256, 512), (512, 1024)])
 def test_tile_quantize_kernel_vs_oracle(kn):
     K, N = kn
