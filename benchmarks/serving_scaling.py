@@ -16,7 +16,9 @@ serving.prefix_cache — a shared-few-shot-header workload through the
           paged engine with and without the cross-request prefix cache:
           the radix tree serves the common header from pinned pool
           blocks, so the cached run prefills >= 50% fewer prompt tokens
-          at identical outputs.
+          at identical outputs; cache-aware admission is *batched*
+          (runs of same-width hits share one partial prefill), so the
+          row also asserts prefill_calls_per_request < 1.
 serving.kv_quant — the paged workload with the KV pool stored as
           tile-quantized Q8 (or Q4) blocks vs fp, at equal slots: peak
           KV bytes must drop >= 40% while greedy accuracy on the math
@@ -284,6 +286,17 @@ def prefix_cache_serving(n_requests: int = 10, n_slots: int = 3,
     saved = 1 - s["prefill_tokens"] / base["prefill_tokens"]
     assert saved >= 0.5, \
         f"prefix cache saved only {saved:.0%} prefill tokens (< 50%)"
+    # batched cache-aware admission: runs of same-header hits share one
+    # partial prefill, so cache-aware admission makes strictly fewer
+    # prefill calls than it admits requests (it was pinned at one call
+    # per request before batched admission)
+    cpr = s["prefill_calls_per_request"]
+    assert cpr < 1.0, \
+        (f"cache-aware admission made {s['prefill_calls']} prefill calls "
+         f"for {s['admitted_requests']} requests (calls/request = "
+         f"{cpr:.2f}, expected < 1: admission is not batching)")
+    assert s["admission_batch_max"] > 1, \
+        "no admission prefill carried more than one request"
     c = cache.stats()
     emit("serving.prefix_cache", s["wall_s"] * 1e6,
          f"slots={s['n_slots']} block_size={block_size} "
@@ -293,6 +306,9 @@ def prefix_cache_serving(n_requests: int = 10, n_slots: int = 3,
          f"baseline_prefill_tokens={base['prefill_tokens']} "
          f"prefill_reduction={saved * 100:.0f}% "
          f"prefill_tokens_saved={s['prefill_tokens_saved']} "
+         f"prefill_calls={s['prefill_calls']} "
+         f"calls_per_request={cpr:.2f} "
+         f"admission_batch_max={s['admission_batch_max']} "
          f"cached_blocks={c['cached_blocks']} "
          f"evictions={c['evictions']} "
          f"preemptions={s['preemptions']}")

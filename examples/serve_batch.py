@@ -75,6 +75,12 @@ print(f"drained {m['completed_requests']} requests "
       f"prefills={sched.n_prefills} "
       f"prefill_tokens={m['prefill_tokens']} "
       f"decode_tokens={m['decode_tokens']}")
+# batched cache-aware admission: runs of same-header cache hits share one
+# partial prefill, so calls-per-request drops below 1 on this workload
+print(f"admission: prefill_calls={m['prefill_calls']} for "
+      f"{m['admitted_requests']} requests "
+      f"(calls/request={m['prefill_calls_per_request']:.2f}, "
+      f"batch_max={m['admission_batch_max']})")
 if PAGED:
     kv = engine.pool.stats()
     dense = dense_kv_bytes(cfg, 4, engine.max_len)

@@ -67,7 +67,13 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
     few-shot header then skip re-prefilling the common prefix, and the
     serving row gains the cache's hit-rate/eviction stats.  Returns the
     same accuracy/cost row shape as ``sweep`` plus the scheduler's step
-    metrics.
+    metrics — including the admission-batching counters
+    (``prefill_calls``, ``prefill_calls_per_request``,
+    ``admission_batch_max``): with a cache attached, runs of cache-hit
+    requests share one batched partial prefill per step, so
+    ``prefill_calls_per_request`` drops below 1 on shared-header
+    workloads (it is pinned at 1 request-per-call for TTS groups, which
+    admit via one prefill + fork).
     """
     prompts = [jnp.asarray(tok.encode(task.prompt)) for task in tasks]
     if prompt_len is None:

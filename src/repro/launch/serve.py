@@ -150,6 +150,9 @@ def main():
                   f"requests_per_s={s['requests_per_s']:.2f} "
                   f"prefill_tokens={s['prefill_tokens']} "
                   f"decode_tokens={s['decode_tokens']} "
+                  f"prefill_calls={s['prefill_calls']} "
+                  f"calls_per_request={s['prefill_calls_per_request']:.2f} "
+                  f"admission_batch_max={s['admission_batch_max']} "
                   f"preemptions={s['preemptions']}")
             if "prefix_cache" in s:
                 pc = s["prefix_cache"]

@@ -399,7 +399,11 @@ def attention_block(
       so the causal mask hides them.  ``x`` then holds only the uncached
       suffix (its ``positions`` start at the cached length) and queries
       attend over the concatenated prefix + suffix keys; only the
-      suffix's K/V is returned for caching.
+      suffix's K/V is returned for caching.  The prefix may be *ragged*
+      across B rows (per-row cached lengths, P = the batch-max padded
+      width): each row's offsets and masked prefix slots are independent,
+      which is what lets the scheduler admit a whole batch of cache-hit
+      requests through one call.
     - decode: cache = {"k","v"} (B, S, Hkv, D); writes current K/V at
       cache_len-1 then attends (batch-sharded layout).
     - paged decode: cache additionally holds "table" (B, W) int32 and the

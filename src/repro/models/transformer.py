@@ -120,7 +120,10 @@ def forward(params, tokens, cfg: ModelConfig, par: ParallelContext = None,
     ``len[b] + j``, queries attend over prefix + suffix, and the returned
     KV covers the suffix alone.  Prefix slots at or past a row's cached
     length get their position pushed past every query so the causal mask
-    hides them (rows with len == 0 attend to none of the prefix).
+    hides them (rows with len == 0 attend to none of the prefix).  The
+    per-row ``len`` makes the prefix *ragged-batch* capable: B rows with
+    different cached lengths (P is the batch-max padded width) run in one
+    pass — the batched cache-aware admission path.
     """
     dtype = jnp.dtype(cfg.dtype)
     x = L.embed(params["embedding"], tokens, dtype)

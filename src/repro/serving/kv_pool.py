@@ -181,7 +181,19 @@ class KVPool:
         reclaim evictable blocks when the free list is short.  Returns
         whether the free list now covers ``n``; callers raise
         :class:`OutOfBlocks` (or preempt) themselves on failure — the pool
-        never evicts on its own, it only asks the registered cache to."""
+        never evicts on its own, it only asks the registered cache to.
+
+        This is the cross-layer admission gate: the scheduler reserves a
+        request's (or batch's — reservations must be *cumulative* across
+        a multi-request plan) new-block need before leasing or
+        prefilling, the engine re-reserves each plan (partial-prefill
+        tables, per-step decode growth) before mutating anything, and the
+        hook ordering is the eviction-before-preemption guarantee — a
+        shortage first reclaims LRU cached blocks and only then surfaces
+        as ``OutOfBlocks``/preemption.  ``reserve`` itself never
+        allocates; a successful reserve is only a promise that an
+        immediately following :meth:`alloc`/:meth:`cow` of ``n`` blocks
+        cannot fail (single-threaded host discipline)."""
         if n <= len(self._free):
             return True
         if self.pressure_hook is not None:

@@ -57,7 +57,10 @@ Copy-on-write, fork refcounts and prefix-cache pinning operate on *block
 ids* and move whole blocks, so they compose unchanged over code+scale
 payloads — :meth:`KVPool.cow` device-copies every leaf of a block via the
 same tree-mapped scatter, and the radix tree pins quantized blocks exactly
-like fp ones.
+like fp ones.  That includes *batched* CoW plans: one ``cow(list)`` call
+commits every pending copy (e.g. all misaligned cached-tail blocks of a
+batched partial-prefill admission) in a single device scatter over the
+code and scale leaves alike.
 """
 from __future__ import annotations
 

@@ -31,7 +31,12 @@ shares a prefix skips re-prefilling it:
 * :meth:`evict` frees least-recently-used **unreferenced leaves** (blocks
   the tree is the sole owner of) and is registered as the pool's
   ``pressure_hook``, so allocation pressure reclaims cache space *before*
-  the scheduler falls back to out-of-blocks preemption.
+  the scheduler falls back to out-of-blocks preemption;
+* :meth:`probe` (a stats- and lease-free lookup) and :meth:`insert_batch`
+  support the scheduler's **batched** cache-aware admission: probe plans
+  which queued requests can lease now versus wait one round for a
+  same-batch insert, and one ``insert_batch`` records a whole admitted
+  batch's prompts before the next round matches.
 
 Accounting is host-side and single-threaded, matching the scheduler's
 step discipline; KV bytes never move on insert/match/evict — only
@@ -98,6 +103,36 @@ class PrefixCache:
         pool.pressure_hook = self.evict
 
     # -- lookup --------------------------------------------------------------
+    def _walk(self, toks: list, *, touch: bool) -> tuple[list[int], int]:
+        """Longest-cached-prefix walk shared by :meth:`match` and
+        :meth:`probe`: full-block chunk descent plus the partial
+        trailing-chunk rule.  ``touch=True`` LRU-touches visited nodes."""
+        bs = self.block_size
+        node = self.root
+        blocks: list[int] = []
+        i = 0
+        while i + bs <= len(toks):
+            child = node.children.get(tuple(toks[i:i + bs]))
+            if child is None:
+                break
+            if touch:
+                child.last_used = self._clock
+            blocks.append(child.block)
+            node = child
+            i += bs
+        # partial trailing chunk: a cached block whose chunk agrees on the
+        # remaining r tokens serves positions [i, i + r) verbatim
+        r = len(toks) - i
+        if 0 < r < bs:
+            for child in node.children.values():
+                if list(child.chunk[:r]) == toks[i:]:
+                    if touch:
+                        child.last_used = self._clock
+                    blocks.append(child.block)
+                    i += r
+                    break
+        return blocks, i
+
     def match(self, tokens) -> tuple[list[int], int]:
         """Longest-cached-prefix lookup.  Returns ``(blocks, cached_len)``.
 
@@ -110,37 +145,64 @@ class PrefixCache:
         prefill copy-on-writes that tail before extending it.  Callers cap
         the searched prefix themselves (typically ``prompt[:-1]`` so at
         least one token is recomputed for the next-token logits).
+
+        Counts toward :meth:`stats` (one lookup; a hit when any block
+        matched) and LRU-touches the matched path.  Use :meth:`probe` for
+        planning passes that must not take a lease or skew the stats.
         """
         toks = [int(t) for t in tokens]
-        bs = self.block_size
         self._clock += 1
         self.lookups += 1
-        node = self.root
-        blocks: list[int] = []
-        i = 0
-        while i + bs <= len(toks):
-            child = node.children.get(tuple(toks[i:i + bs]))
-            if child is None:
-                break
-            child.last_used = self._clock
-            blocks.append(child.block)
-            node = child
-            i += bs
-        # partial trailing chunk: a cached block whose chunk agrees on the
-        # remaining r tokens serves positions [i, i + r) verbatim
-        r = len(toks) - i
-        if 0 < r < bs:
-            for child in node.children.values():
-                if list(child.chunk[:r]) == toks[i:]:
-                    child.last_used = self._clock
-                    blocks.append(child.block)
-                    i += r
-                    break
+        blocks, i = self._walk(toks, touch=True)
         if blocks:
             self.pool.retain(blocks)  # the caller's lease
             self.hits += 1
             self.tokens_matched += i
         return blocks, i
+
+    def probe(self, tokens) -> int:
+        """Length of the longest cached prefix of ``tokens`` *without*
+        taking a lease, LRU-touching nodes, or counting a lookup.
+
+        The planning half of batched admission: the scheduler probes a
+        candidate to decide whether to lease now (:meth:`match`) or defer
+        it until an earlier request in the same batch has inserted a
+        longer shared prefix.  Purely read-only on tree and pool."""
+        blocks, i = self._walk([int(t) for t in tokens], touch=False)
+        return i
+
+    def potential_match(self, tokens, prompt) -> int:
+        """Length :meth:`match`/:meth:`probe` of ``tokens`` would return
+        against a tree holding only :meth:`insert` of ``prompt`` — no
+        tree access, pure token arithmetic.
+
+        This is batched admission's deferral estimate: a same-run earlier
+        request with ``prompt`` has not prefilled yet, so its blocks
+        cannot be leased, but once it inserts, the union-tree match is
+        the max of :meth:`probe` and this over the run's prompts (radix
+        chains only merge on identical chunks, so the longest prefix in
+        the union is the max over individual chains).  Mirrors the match
+        rules exactly: the full-block walk stops at the common prefix,
+        at ``tokens``'s own last full block, and at the full blocks
+        ``prompt`` actually inserts; the partial-trailing-chunk rule
+        applies when the remaining ``r < block_size`` query tokens agree
+        with the next inserted block.  Callers cap the searched prefix
+        as they do for match (typically ``prompt[:-1]``)."""
+        toks = [int(t) for t in tokens]
+        other = [int(t) for t in prompt]
+        bs = self.block_size
+        cap = len(toks)
+        limit = (len(other) // bs) * bs  # tokens the insert records
+        raw = 0
+        for a, b in zip(toks, other):
+            if a != b:
+                break
+            raw += 1
+        i = min((raw // bs) * bs, (cap // bs) * bs, limit)
+        r = cap - i
+        if 0 < r < bs and raw >= cap and i < limit:
+            return cap                   # partial tail serves [i, cap)
+        return i
 
     # -- insertion -----------------------------------------------------------
     def insert(self, tokens, blocks) -> int:
@@ -177,6 +239,18 @@ class PrefixCache:
             node = child
             path_ids.add(id(child))
         return added
+
+    def insert_batch(self, items) -> int:
+        """Record a *batch* of prefilled prompts in one call.
+
+        ``items`` iterates ``(tokens, blocks)`` pairs with the
+        :meth:`insert` contract each.  This is the insert half of batched
+        admission: after one batched partial prefill admits N rows, all N
+        prompts land in the tree before the next admission round matches
+        against it (order within the batch is preserved, so shared paths
+        dedup exactly as sequential inserts would).  Returns the total
+        number of blocks newly pinned."""
+        return sum(self.insert(toks, blocks) for toks, blocks in items)
 
     # -- eviction ------------------------------------------------------------
     def _evictable_leaves(self, avoid) -> list[_Node]:

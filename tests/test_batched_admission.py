@@ -1,0 +1,221 @@
+"""Batched cache-aware admission: parity + metrics.
+
+Two layers, mirroring the tentpole:
+
+* engine level — one B>1 partial prefill with *ragged* per-row cached
+  lengths (block-aligned and mid-block in the same batch) must reproduce
+  per-row B=1 partial prefills bit-for-bit on greedy token streams (and
+  logits to float tolerance), on the fp pool and the quantized Q8 pool;
+* scheduler level — N same-header requests admitted in one step through
+  the batched path must produce results identical to strict one-at-a-time
+  admission (``max_admission_batch=1``), while ``SchedulerMetrics``
+  records an admission batch size > 1 and fewer prefill calls than
+  admitted requests.
+
+Both layers end with pool leak checks (drains leave only cache pins).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.engine import ContinuousScheduler, DecodeEngine, Request
+from repro.serving.kv_pool import blocks_for
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.sampler import SamplerConfig
+
+NO_STOP = (9999,)
+GREEDY = SamplerConfig(greedy=True)
+ATOL = 1e-4
+BS = 8
+
+
+def _engine(params, cfg, tok, *, kv_quant="none", max_len=64, n_blocks=128):
+    return DecodeEngine(params, cfg, max_len=max_len, eos_id=tok.eos_id,
+                        pad_id=tok.pad_id, paged=True, block_size=BS,
+                        n_blocks=n_blocks, kv_quant=kv_quant)
+
+
+# ---------------------------------------------------------------------------
+# Engine level: batched ragged partial prefill == per-row partial prefills
+# ---------------------------------------------------------------------------
+
+
+def _partial(eng, src_table, prompt, clens, pad_to, n_steps, seed=0):
+    """Partial-prefill ``len(clens)`` rows off one source row's cached
+    blocks (leasing them like PrefixCache.match would), decode, release.
+    Suffixes are right-padded to ``pad_to`` so B=1 references and the
+    batched run share the suffix width (the scheduler pads to prompt_len
+    the same way).  Returns (next-token logits, greedy tokens)."""
+    B = len(clens)
+    W = max(blocks_for(c, BS) for c in clens)
+    ctab = np.zeros((B, W), np.int32)
+    for i, c in enumerate(clens):
+        nb = blocks_for(c, BS)
+        ctab[i, :nb] = src_table[:nb]
+        eng.pool.retain(src_table[:nb])
+    toks = np.full((B, pad_to), eng.pad_id, np.int32)
+    lens = []
+    for i, c in enumerate(clens):
+        suf = prompt[c:]
+        toks[i, :len(suf)] = suf
+        lens.append(len(suf))
+    st = eng.prefill(jnp.asarray(toks), jnp.asarray(lens, jnp.int32),
+                     cached_table=ctab,
+                     cached_lens=np.asarray(clens, np.int64))
+    logits = np.asarray(st.pending_logits)
+    st, out = eng.generate(st, n_steps, jax.random.key(seed), GREEDY,
+                           stop_ids=NO_STOP)
+    eng.release_rows(st, list(range(B)))
+    return logits, np.asarray(out)
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "q8"])
+def test_batched_ragged_partial_prefill_matches_per_row(trained_tiny,
+                                                        tiny_cfg, tok,
+                                                        kv_quant):
+    """Aligned (8, 16) and misaligned (11) cached lengths in ONE batched
+    partial prefill reproduce the per-row B=1 runs."""
+    eng = _engine(trained_tiny, tiny_cfg, tok, kv_quant=kv_quant)
+    prompt = tok.encode("Q:33+44=?R:33+44=77.A:")
+    clens = [8, 11, 16]
+    pad_to = len(prompt) - min(clens)
+    full = eng.prefill(jnp.asarray(prompt)[None],
+                       jnp.array([len(prompt)], jnp.int32))
+    src_table = np.asarray(jax.device_get(full.cache["table"]))[0]
+
+    refs = [_partial(eng, src_table, prompt, [c], pad_to, 6) for c in clens]
+    bl, bt = _partial(eng, src_table, prompt, clens, pad_to, 6)
+    for i, (rl, rt) in enumerate(refs):
+        np.testing.assert_allclose(bl[i], rl[0], atol=ATOL, err_msg=f"row {i}")
+        np.testing.assert_array_equal(bt[i], rt[0], err_msg=f"row {i}")
+    eng.release_rows(full, [0])
+    assert eng.pool.blocks_in_use == 0
+
+
+def test_batched_tail_cow_commits_once_per_batch(trained_tiny, tiny_cfg,
+                                                 tok):
+    """Every misaligned row's tail CoW commits in one pool.cow call:
+    cow_copies grows by exactly the number of misaligned rows, and the
+    shared source block keeps one reference per remaining owner."""
+    eng = _engine(trained_tiny, tiny_cfg, tok)
+    prompt = tok.encode("Q:15+26=?R:15+26=41.A:")
+    full = eng.prefill(jnp.asarray(prompt)[None],
+                       jnp.array([len(prompt)], jnp.int32))
+    src_table = np.asarray(jax.device_get(full.cache["table"]))[0]
+    clens = [9, 11, 13]       # all misaligned: three tail CoWs, one call
+    before = eng.pool.cow_copies
+    _partial(eng, src_table, prompt, clens, len(prompt) - min(clens), 2)
+    assert eng.pool.cow_copies - before == len(clens)
+    eng.release_rows(full, [0])
+    assert eng.pool.blocks_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler level: one-step batched admission == one-at-a-time admission
+# ---------------------------------------------------------------------------
+
+HEADER = "Q:1+2=?A:3.Q:4+5=?A:9.Q:7+2=?A:9."
+WARM_Q = "Q:9+9=?A:"
+QUESTIONS = ["Q:1+2=?A:", "Q:3+4=?A:", "Q:5+6=?A:", "Q:7+8=?A:"]
+
+
+def _run_shared_header(params, cfg, tok, *, kv_quant, max_batch):
+    eng = _engine(params, cfg, tok, kv_quant=kv_quant, max_len=96,
+                  n_blocks=161)
+    cache = PrefixCache(eng.pool)
+    sched = ContinuousScheduler(eng, n_slots=6, prompt_len=56,
+                                stop_ids=NO_STOP, prefix_cache=cache,
+                                max_admission_batch=max_batch)
+    # warm the header so the test batch admits as hits in one step
+    sched.submit(Request(req_id=100,
+                         prompt=jnp.asarray(tok.encode(HEADER + WARM_Q)),
+                         max_new_tokens=3))
+    sched.run(jax.random.key(7), GREEDY)
+    # 4 distinct questions (one cached-width bucket) + an exact repeat of
+    # the warm prompt (longer match incl. a mid-block tail: its own bucket)
+    for i, q in enumerate(QUESTIONS):
+        sched.submit(Request(req_id=i,
+                             prompt=jnp.asarray(tok.encode(HEADER + q)),
+                             max_new_tokens=4))
+    sched.submit(Request(req_id=4,
+                         prompt=jnp.asarray(tok.encode(HEADER + WARM_Q)),
+                         max_new_tokens=4))
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert eng.pool.blocks_in_use == cache.n_cached_blocks  # rows drained
+    return {i: res[i] for i in range(5)}, sched
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "q8"])
+def test_one_step_batched_admission_parity_and_metrics(trained_tiny,
+                                                       tiny_cfg, tok,
+                                                       kv_quant):
+    res_seq, s_seq = _run_shared_header(trained_tiny, tiny_cfg, tok,
+                                        kv_quant=kv_quant, max_batch=1)
+    res_bat, s_bat = _run_shared_header(trained_tiny, tiny_cfg, tok,
+                                        kv_quant=kv_quant, max_batch=None)
+    # bit-identical greedy streams vs one-at-a-time admission
+    assert res_bat == res_seq
+    m_seq = s_seq.metrics.summary()
+    m_bat = s_bat.metrics.summary()
+    # sequential baseline: every admission call carried one request
+    assert m_seq["admission_batch_max"] == 1
+    assert m_seq["prefill_calls"] == m_seq["admitted_requests"] == 6
+    # batched: the 4 same-width hits shared one partial prefill (the
+    # repeat prompt buckets separately on its longer cached width)
+    assert m_bat["admission_batch_max"] >= len(QUESTIONS)
+    assert m_bat["prefill_calls"] < m_bat["admitted_requests"]
+    assert m_bat["prefill_calls_per_request"] < 1.0
+    # batching changed call shapes only — not what was cached or saved
+    for key in ("prefix_cache_hits", "prefill_tokens_saved",
+                "prefill_tokens"):
+        assert m_bat[key] == m_seq[key], key
+
+
+def test_same_step_cold_header_still_hits(trained_tiny, tiny_cfg, tok):
+    """Deferral keeps the sequential path's same-step-hit property: a
+    cold shared header admits one full prefill in round one, and the
+    followers admit as hits in round two of the SAME step."""
+    eng = _engine(trained_tiny, tiny_cfg, tok, max_len=96, n_blocks=161)
+    cache = PrefixCache(eng.pool)
+    sched = ContinuousScheduler(eng, n_slots=4, prompt_len=56,
+                                stop_ids=NO_STOP, prefix_cache=cache)
+    for i, q in enumerate(QUESTIONS[:3]):
+        sched.submit(Request(req_id=i,
+                             prompt=jnp.asarray(tok.encode(HEADER + q)),
+                             max_new_tokens=3))
+    assert sched.step_once(jax.random.key(0), GREEDY)
+    m = sched.metrics.summary()
+    assert m["admitted_requests"] == 3         # all admitted in step 0
+    assert m["prefix_cache_hits"] == 2         # followers hit the insert
+    assert m["prefill_calls"] == 2             # cold miss + one hit batch
+    assert sched.metrics.admission_batch_sizes == [1, 2]
+    sched.run(jax.random.key(1), GREEDY)
+    assert eng.pool.blocks_in_use == cache.n_cached_blocks
+
+
+def test_duplicate_prompts_defer_once_then_batch(trained_tiny, tiny_cfg,
+                                                 tok):
+    """Byte-identical prompts — the most cache-friendly workload — defer
+    exactly once: the cold head prefills alone, then the followers batch
+    into one partial-prefill call as hits (the deferral estimate mirrors
+    match's plen-1 cap, so identical prompts are not serialized)."""
+    eng = _engine(trained_tiny, tiny_cfg, tok, max_len=96, n_blocks=161)
+    cache = PrefixCache(eng.pool)
+    sched = ContinuousScheduler(eng, n_slots=4, prompt_len=56,
+                                stop_ids=NO_STOP, prefix_cache=cache)
+    prompt = jnp.asarray(tok.encode(HEADER + WARM_Q))
+    for i in range(3):
+        sched.submit(Request(req_id=i, prompt=prompt, max_new_tokens=3))
+    assert sched.step_once(jax.random.key(0), GREEDY)
+    assert sched.metrics.admission_batch_sizes == [1, 2]
+    assert sched.metrics.summary()["prefix_cache_hits"] == 2
+    res = sched.run(jax.random.key(1), GREEDY)
+    assert res[0] == res[1] == res[2]
+    assert eng.pool.blocks_in_use == cache.n_cached_blocks
+
+
+def test_max_admission_batch_validation(trained_tiny, tiny_cfg, tok):
+    eng = _engine(trained_tiny, tiny_cfg, tok)
+    with pytest.raises(ValueError):
+        ContinuousScheduler(eng, max_admission_batch=0)

@@ -1,0 +1,140 @@
+"""Docs stay truthful: links resolve, commands reference real code, and
+the quickstart ``--dry`` smokes actually execute.
+
+This is the CI ``docs`` job (it also runs inside tier-1).  Three layers:
+
+* every intra-repo markdown link in README.md / docs/*.md points at a
+  file that exists;
+* every ``python -m <module>`` / ``python <script>`` command in a fenced
+  block names a real file, and every ``--flag`` it passes appears
+  literally in that file's source (catches flag renames rotting the
+  docs);
+* the commands that carry ``--dry`` are executed end-to-end (small
+  untrained models, seconds each) — the docs' own smoke test.
+"""
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+
+def _docs():
+    assert DOC_FILES and all(p.exists() for p in DOC_FILES), DOC_FILES
+    return [(p, p.read_text()) for p in DOC_FILES]
+
+
+def _commands():
+    """(doc, command) for every shell line in a fenced block that invokes
+    python; backslash continuations are joined."""
+    out = []
+    for doc, text in _docs():
+        for block in re.findall(r"```(?:bash|sh|shell)?\n(.*?)```", text,
+                                re.S):
+            joined = block.replace("\\\n", " ")
+            for line in joined.splitlines():
+                line = line.strip()
+                if re.search(r"\bpython3?\b", line):
+                    out.append((doc, line))
+    return out
+
+
+def _target_file(cmd: str) -> Path:
+    """Source file a doc command executes (module or script path)."""
+    m = re.search(r"python3?\s+-m\s+([\w.]+)", cmd)
+    if m:
+        name = m.group(1)
+        mod = name.replace(".", "/")
+        for cand in (ROOT / f"{mod}.py", ROOT / "src" / f"{mod}.py",
+                     ROOT / mod / "__main__.py"):
+            if cand.exists():
+                return cand
+        if name.split(".")[0] in ("repro", "benchmarks", "examples"):
+            raise AssertionError(f"doc command references missing module "
+                                 f"{name!r}: {cmd}")
+        return None  # third-party entry point (pytest, pip, ...)
+    m = re.search(r"python3?\s+([\w./-]+\.py)", cmd)
+    if m:
+        cand = ROOT / m.group(1)
+        assert cand.exists(), f"doc command references missing script: {cmd}"
+        return cand
+    return None
+
+
+def test_doc_surface_exists():
+    names = {p.name for p in DOC_FILES}
+    assert {"README.md", "serving.md", "benchmarks.md"} <= names
+
+
+def test_intra_repo_links_resolve():
+    broken = []
+    for doc, text in _docs():
+        for label, target in re.findall(r"\[([^\]]*)\]\(([^)]+)\)", text):
+            target = target.split("#")[0].strip()
+            if not target or target.startswith(("http://", "https://",
+                                                "mailto:")):
+                continue
+            if not (doc.parent / target).resolve().exists():
+                broken.append(f"{doc.name}: [{label}]({target})")
+    assert not broken, f"broken intra-repo doc links: {broken}"
+
+
+def test_doc_commands_reference_real_modules_and_flags():
+    cmds = _commands()
+    assert cmds, "no python commands found in the docs"
+    stale = []
+    for doc, cmd in cmds:
+        target = _target_file(cmd)
+        if target is None:
+            continue
+        src = target.read_text()
+        for flag in re.findall(r"(--[\w-]+)", cmd):
+            if flag not in src:
+                stale.append(f"{doc.name}: {flag} not in {target.name}: "
+                             f"{cmd}")
+    assert not stale, f"doc commands pass flags their targets lack: {stale}"
+
+
+def test_doc_flag_matrix_matches_serve():
+    """Every flag named in the README's serve flag matrix exists in
+    launch/serve.py (and the core serving flags are all documented)."""
+    readme = (ROOT / "README.md").read_text()
+    serve = (ROOT / "src/repro/launch/serve.py").read_text()
+    documented = set(re.findall(r"`(--[\w-]+)", readme))
+    real = set(re.findall(r"add_argument\(\s*\"(--[\w-]+)\"", serve))
+    assert documented & real, "README documents no serve flags?"
+    ghost = {f for f in documented if f not in real
+             and f in ("--continuous", "--paged", "--prefix-cache",
+                       "--kv-quant", "--quantize", "--fewshot", "--ckpt",
+                       "--cache-capacity", "--block-size", "--kv-blocks",
+                       "--slots")}
+    assert not ghost, f"README flag matrix names flags serve.py lacks: {ghost}"
+    undocumented = {"--continuous", "--paged", "--prefix-cache",
+                    "--kv-quant"} - documented
+    assert not undocumented, \
+        f"core serving flags missing from the README: {undocumented}"
+
+
+@pytest.mark.parametrize("cmd", sorted({c for _, c in _commands()
+                                        if "--dry" in c}))
+def test_quickstart_dry_commands_run(cmd):
+    """Execute each documented --dry smoke exactly as the docs print it
+    (module invocation; env vars from the line are honored)."""
+    env = dict(os.environ)
+    m = re.match(r"((?:[\w]+=[^\s]+\s+)*)(.*)", cmd)
+    for assign in m.group(1).split():
+        k, _, v = assign.partition("=")
+        env[k] = v.replace("$PYTHONPATH", env.get("PYTHONPATH", ""))
+    rest = m.group(2)
+    assert rest.startswith("python"), cmd
+    argv = [sys.executable] + rest.split()[1:]
+    proc = subprocess.run(argv, cwd=ROOT, env=env, capture_output=True,
+                          text=True, timeout=900)
+    assert proc.returncode == 0, \
+        (f"documented command failed: {cmd}\n--- stdout ---\n"
+         f"{proc.stdout[-2000:]}\n--- stderr ---\n{proc.stderr[-2000:]}")
