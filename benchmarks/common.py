@@ -1,6 +1,10 @@
-"""Shared benchmark helpers: timing, CSV rows, a pre-trained tiny model."""
+"""Shared benchmark helpers: timing, CSV rows, a pre-trained tiny model,
+and the BENCH_<area>.json snapshot machinery (record / envelope check)."""
 from __future__ import annotations
 
+import json
+import os
+import re
 import time
 from functools import lru_cache
 
@@ -51,6 +55,106 @@ def trained_tiny():
                       log_fn=lambda *_: None)
     loader.close()
     return tok, cfg, p
+
+
+# ---------------------------------------------------------------------------
+# Benchmark snapshots (BENCH_<area>.json): record + envelope check
+# ---------------------------------------------------------------------------
+#
+# A snapshot freezes one benchmark area's rows.  ``check_snapshot`` compares
+# a fresh run against the committed snapshot under an *envelope* policy:
+#
+# * error metrics (name contains "err", or relRMS) must not grow by more
+#   than ERR_RATIO (accuracy must not silently rot);
+# * "reduction" percentages (KV bytes, prefill tokens) must not drop more
+#   than REDUCTION_SLACK_POINTS below the snapshot;
+# * accuracy/hit-rate metrics must not drop more than ACC_SLACK;
+# * wall times only fail on order-of-magnitude blowups — TIME_FACTOR× the
+#   snapshot with a TIME_FLOOR_US floor (CI machines are noisy; the
+#   trajectory is the signal, the gate only catches catastrophes).  Both
+#   knobs are env-overridable (REPRO_BENCH_TIME_FACTOR / _TIME_FLOOR_US).
+# * a row present in the snapshot but missing from the run is a failure.
+#
+# Everything else rides along informationally — the snapshot file itself
+# is the recorded perf trajectory.
+
+ERR_RATIO = 4.0
+REDUCTION_SLACK_POINTS = 5.0
+ACC_SLACK = 0.26
+_ACC_KEYS = ("accuracy", "fp_accuracy", "hit_rate")
+
+
+def _time_envelope() -> tuple[float, float]:
+    return (float(os.environ.get("REPRO_BENCH_TIME_FACTOR", "10")),
+            float(os.environ.get("REPRO_BENCH_TIME_FLOOR_US", "500")))
+
+
+def parse_metrics(derived: str) -> dict:
+    """Pull ``key=value`` numeric metrics out of a row's derived string
+    (values like ``3.1e-07``, ``42%``, ``0.95`` all parse; prose such as
+    ``(interpret-mode python timing)`` is ignored)."""
+    out = {}
+    for key, val in re.findall(r"(\w+)=([-+0-9.eE]+)%?", derived):
+        try:
+            out[key] = float(val)
+        except ValueError:
+            pass
+    return out
+
+
+def snapshot_path(area: str) -> str:
+    return f"BENCH_{area}.json"
+
+
+def snapshot(area: str, rows) -> dict:
+    return {"version": 1, "area": area,
+            "rows": [{"name": n, "us": round(us, 1), "derived": d,
+                      "metrics": parse_metrics(d)} for n, us, d in rows]}
+
+
+def write_snapshot(area: str, rows) -> str:
+    path = snapshot_path(area)
+    with open(path, "w") as f:
+        json.dump(snapshot(area, rows), f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def check_snapshot(area: str, rows, old: dict) -> list[str]:
+    """Envelope-check fresh ``rows`` against a previously recorded
+    snapshot dict; returns violation strings (empty = pass)."""
+    new = {r["name"]: r for r in snapshot(area, rows)["rows"]}
+    tf, tfloor = _time_envelope()
+    bad = []
+    for prev in old.get("rows", ()):
+        name = prev["name"]
+        cur = new.get(name)
+        if cur is None:
+            bad.append(f"{area}:{name}: row missing from this run")
+            continue
+        us_old, us_new = prev.get("us", 0.0), cur.get("us", 0.0)
+        if us_old > 0 and us_new > tf * max(us_old, tfloor):
+            bad.append(f"{area}:{name}: time {us_new:.1f}us > {tf:.0f}x "
+                       f"envelope over {us_old:.1f}us")
+        mo, mn = prev.get("metrics", {}), cur.get("metrics", {})
+        for k, vo in mo.items():
+            if k not in mn:
+                continue
+            vn = mn[k]
+            if "err" in k or k == "relRMS":
+                if vn > ERR_RATIO * vo + 1e-7:
+                    bad.append(f"{area}:{name}: {k} {vn:.3g} > "
+                               f"{ERR_RATIO:.0f}x snapshot {vo:.3g}")
+            elif k.endswith("reduction"):
+                if vn < vo - REDUCTION_SLACK_POINTS:
+                    bad.append(f"{area}:{name}: {k} {vn:.1f} dropped > "
+                               f"{REDUCTION_SLACK_POINTS:.0f} points below "
+                               f"snapshot {vo:.1f}")
+            elif k in _ACC_KEYS:
+                if vn < vo - ACC_SLACK:
+                    bad.append(f"{area}:{name}: {k} {vn:.3f} dropped > "
+                               f"{ACC_SLACK} below snapshot {vo:.3f}")
+    return bad
 
 
 def eval_ppl(params, cfg, tok, n_tasks: int = 64, seed: int = 99) -> float:

@@ -12,7 +12,13 @@ layout (unit-stride), (c) + coalesced packing (the Pallas kernel path),
 Table 2 — the matrix-vs-vector unit gap, analytic for TPU v5e (MXU 197
 TFLOP/s bf16 vs VPU ~4 TFLOP/s) + measured CPU proxy.
 
-Table 5 — LUT-fp16 attention vs f32 attention output error.
+Table 5 — LUT-fp16 attention vs f32 attention output error, plus the
+fused LUT-softmax quantized paged-decode kernel vs its exact-f32 mode
+(time + error against the f32 oracle).
+
+The ``autotune.*`` rows time the dequant-GEMM block-size candidate set at
+the Fig. 15 shape and record the measured winner in the autotune cache
+(``repro.kernels.autotune``), which subsequent wrapper calls pick up.
 """
 from __future__ import annotations
 
@@ -77,9 +83,13 @@ def fig15_dequant_gemm():
     def hmx_layout(xv):
         return xv @ TQ.dequantize(qw_tile, dtype=xv.dtype)
 
-    # (c) ours: Pallas kernel, dequant fused in the MXU tile loop
-    def fused(xv):
-        return ops.lut_dequant_matmul(xv, qw_tile)
+    # (c) ours: Pallas kernel, dequant fused in the MXU tile loop.  The
+    # plan hoists the wrapper's scheme inference and block-size choice out
+    # of the timed region, so this bar times the jitted kernel the same
+    # way (a)/(b)/(d) time their jitted closures — previously the unjitted
+    # wrapper re-ran that python work on every timed call, overstating the
+    # fused bar's cost.
+    fused = ops.plan_lut_dequant_matmul(qw_tile, m=M)
 
     # (d) upper bound: no dequantization
     w16 = w.astype(jnp.bfloat16)
@@ -108,6 +118,72 @@ def fig15_dequant_gemm():
     emit("fig15.bytes_int4_weights", 0, f"{int4_bytes}")
     emit("fig15.bytes_bf16_weights", 0,
          f"{bf16_bytes} ({bf16_bytes / int4_bytes:.2f}x more HBM traffic)")
+
+
+def autotune_gemm():
+    """Measure the dequant-GEMM block-size candidates at the Fig. 15 shape
+    and record the winner in the autotune cache (``runs/autotune.json``) —
+    subsequent ``lut_dequant_matmul`` calls at this shape pick it up.
+    Interpret-mode timings only order candidates by python-loop trip
+    count, but the record/lookup plumbing is identical on TPU."""
+    from repro.kernels import autotune as AT
+    from repro.kernels import lut_dequant_gemm as G
+
+    M, K, N = 16, 1024, 1024
+    g = 32
+    w = jax.random.normal(KEY, (K, N)) * 0.05
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (M, K))
+    qw = TQ.quantize(w, scheme="tile")
+    bm = AT.pick_block(M, 128)
+    best, best_us = None, float("inf")
+    for bn in AT.block_candidates(N, 256, g // 2, max_candidates=2):
+        for bk in AT.block_candidates(K, 128, 2, max_candidates=2):
+            fn = lambda xv: G.lut_dequant_gemm(
+                xv, qw["codes"], qw["scales"], qw["codebook"], scheme="tile",
+                group_size=g, bm=bm, bn=bn, bk=bk, interpret=ops.INTERPRET)
+            t = time_fn(fn, x, iters=2, warmup=1)
+            emit(f"autotune.gemm_bm{bm}_bn{bn}_bk{bk}", t, "")
+            if t < best_us:
+                best, best_us = (bm, bn, bk), t
+    AT.record(AT.gemm_key(M, K, N, "tile", g), best, best_us)
+    emit("autotune.gemm_best", best_us,
+         f"blocks={best} recorded_in={AT.cache_path()}")
+
+
+def paged_lut_attention():
+    """Fused LUT-softmax quantized paged decode vs the exact-f32 mode:
+    wall time of both paths plus the LUT path's error against the f32
+    oracle (the Table-5 envelope applied to the paged decode kernel)."""
+    import numpy as np
+
+    from repro.serving import kv_quant as KQ
+
+    B, W, bs, Hkv, G, D = 2, 4, 4, 2, 2, 32
+    nb = 1 + B * W
+    rng = np.random.default_rng(5)
+    kp = jnp.asarray(rng.normal(size=(nb, bs, Hkv, D)), jnp.float32) * 0.5
+    vp = jnp.asarray(rng.normal(size=(nb, bs, Hkv, D)), jnp.float32) * 0.5
+    q = jnp.asarray(rng.normal(size=(B, 1, Hkv * G, D)), jnp.float32) * 0.5
+    avail = list(range(1, nb))
+    table = np.zeros((B, W), np.int32)
+    for b in range(B):
+        for j in range(W):
+            table[b, j] = avail.pop(rng.integers(len(avail)))
+    table = jnp.asarray(table)
+    lens = jnp.asarray([W * bs, 2 * bs + 3], jnp.int32)
+    kq = KQ.quantize_kv(kp, mode="q8", gr=2, gc=16)
+    vq = KQ.quantize_kv(vp, mode="q8", gr=2, gc=16)
+
+    qg = q.reshape(B, Hkv, G, D)
+    o32 = ref.quant_paged_decode_attention_ref(qg, kq, vq, table, lens)
+    for mode in ("exact", "lut"):
+        fn = lambda a: ops.paged_flash_decode(a, kq, vq, table, lens,
+                                              exp_mode=mode)
+        t = time_fn(fn, q, iters=3, warmup=1)
+        o = fn(q).reshape(B, Hkv, G, D).astype(jnp.float32)
+        err = float(jnp.abs(o - o32).max())
+        emit(f"tbl5.quant_paged_decode.{mode}", t,
+             f"max_err_vs_f32={err:.2e}")
 
 
 def tbl2_unit_gap():
@@ -146,8 +222,10 @@ def tbl5_attention_accuracy():
 def run():
     fig14_softmax()
     fig15_dequant_gemm()
+    autotune_gemm()
     tbl2_unit_gap()
     tbl5_attention_accuracy()
+    paged_lut_attention()
 
 
 if __name__ == "__main__":

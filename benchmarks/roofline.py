@@ -27,9 +27,8 @@ import glob
 import json
 import os
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
+# single-sourced with the kernel block-size autotuner's roofline model
+from repro.kernels.autotune import HBM_BW, LINK_BW, PEAK_FLOPS
 
 MESHES = {"16x16": dict(pod=1, data=16, model=16, chips=256),
           "2x16x16": dict(pod=2, data=16, model=16, chips=512)}

@@ -376,6 +376,17 @@ def kv_quant_serving(mode: str = "q8", n_requests: int = 10,
          f"preemptions={s_q['preemptions']}")
 
 
+def dry_rows():
+    """The serving snapshot area (``benchmarks.run --record/--check``):
+    the three paged-engine rows in dry mode — untrained tiny model, small
+    workload, every built-in parity/saving assertion still armed.  Fast
+    enough for CI while the emitted metrics (kv_byte_reduction,
+    prefill_reduction, peak bytes) stay deterministic."""
+    paged_serving(dry=True)
+    prefix_cache_serving(dry=True)
+    kv_quant_serving(mode="q8", dry=True)
+
+
 def run():
     fig8_attention_breakdown()
     fig11_decode_throughput()

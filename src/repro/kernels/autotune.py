@@ -1,0 +1,269 @@
+"""Block-size autotuner for the Pallas kernel wrappers.
+
+The wrappers in ``repro.kernels.ops`` used to hard-code block-size targets
+(128/256) and pick the largest dividing block under them.  This module
+keeps that shape discipline but chooses among *valid candidates* with an
+analytic roofline model (the same v5e constants ``benchmarks/roofline.py``
+reports against), and lets ``benchmarks/kernel_ablation.py`` overwrite the
+analytic choice with a *measured* one: its autotune section times the
+candidate set through the real kernels and records the winner in a cached
+per-shape table (``runs/autotune.json`` by default, override with
+``REPRO_AUTOTUNE_CACHE``).  Lookup order per shape key:
+
+1. in-process memo;
+2. measured entry in the cache file;
+3. analytic roofline score over the candidate set.
+
+``REPRO_AUTOTUNE=0`` opts out entirely and restores the legacy fixed
+targets (still via :func:`pick_block`, so the divisibility contracts are
+enforced either way).
+
+Scoring is deterministic: ``max(flops/peak, bytes/bw)`` plus a per-grid-
+step launch overhead, with a hard penalty for blocks whose VMEM footprint
+exceeds the budget.  For the small shapes the repo's tests use, the
+largest valid blocks win — i.e. the analytic tuner reproduces the legacy
+choices exactly and only diverges where a measured entry says otherwise.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Sequence
+
+# TPU v5e — single-sourced here; benchmarks/roofline.py imports these.
+PEAK_FLOPS = 197e12   # bf16 MXU FLOP/s
+HBM_BW = 819e9        # HBM bytes/s
+LINK_BW = 50e9        # ICI bytes/s per link
+
+GRID_STEP_OVERHEAD_S = 2e-6     # per-grid-step issue/DMA-setup cost
+VMEM_BUDGET_BYTES = 16 * 2**20  # working-set budget per kernel instance
+
+_MEMO: dict = {}
+_FILE_CACHE: dict | None = None
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "1") != "0"
+
+
+def cache_path() -> str:
+    return os.environ.get("REPRO_AUTOTUNE_CACHE", "runs/autotune.json")
+
+
+def reset() -> None:
+    """Drop the in-process memo and the loaded cache file (tests)."""
+    global _FILE_CACHE
+    _MEMO.clear()
+    _FILE_CACHE = None
+
+
+# ---------------------------------------------------------------------------
+# Valid block enumeration (the divisibility contracts live here)
+# ---------------------------------------------------------------------------
+
+
+def pick_block(n: int, target: int, multiple_of: int = 1) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` and a multiple of
+    ``multiple_of``; falls back to ``n`` itself when no smaller divisor
+    qualifies.
+
+    Raises ``ValueError`` when no valid block exists at all — i.e. ``n``
+    itself violates ``multiple_of`` (this used to be returned silently,
+    truncating downstream BlockSpec shapes like the tile-scheme scales
+    block ``bn // (group_size // 2)``).
+    """
+    b = min(n, target)
+    while b > 1 and (n % b or b % multiple_of):
+        b -= 1
+    if b > 1:
+        return b
+    if n % multiple_of:
+        raise ValueError(
+            f"no valid block size for an axis of size {n}: blocks must "
+            f"divide {n} and be a multiple of {multiple_of} (target "
+            f"{target}), but {n} itself is not a multiple of {multiple_of}")
+    return n
+
+
+def block_candidates(n: int, target: int, multiple_of: int = 1,
+                     max_candidates: int = 4) -> list[int]:
+    """Valid block sizes (divisors of ``n``, multiples of ``multiple_of``),
+    largest-first starting at ``min(n, target)``, at most
+    ``max_candidates``.  Always contains :func:`pick_block`'s choice; same
+    ``ValueError`` contract when no valid block exists."""
+    out = []
+    b = min(n, target)
+    while b >= 1 and len(out) < max_candidates:
+        if n % b == 0 and b % multiple_of == 0:
+            out.append(b)
+        b -= 1
+    if not out:
+        out = [pick_block(n, target, multiple_of)]  # n itself, or raises
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cache file (measured entries recorded by benchmarks/kernel_ablation.py)
+# ---------------------------------------------------------------------------
+
+
+def _load_cache() -> dict:
+    global _FILE_CACHE
+    if _FILE_CACHE is None:
+        path = cache_path()
+        try:
+            with open(path) as f:
+                _FILE_CACHE = json.load(f).get("entries", {})
+        except (OSError, ValueError):
+            _FILE_CACHE = {}
+    return _FILE_CACHE
+
+
+def record(key: str, blocks: Sequence[int], us: float) -> None:
+    """Record a measured block choice for ``key`` in the cache file (and
+    the in-process view, so subsequent picks use it immediately)."""
+    entries = dict(_load_cache())
+    entries[key] = {"blocks": [int(b) for b in blocks], "us": float(us),
+                    "source": "measured"}
+    path = cache_path()
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"version": 1, "entries": entries}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
+    global _FILE_CACHE
+    _FILE_CACHE = entries
+    _MEMO.pop((key, True), None)
+
+
+# ---------------------------------------------------------------------------
+# Choice machinery
+# ---------------------------------------------------------------------------
+
+
+def _roofline_score(flops: float, hbm_bytes: float, grid_steps: int,
+                    vmem_bytes: float) -> float:
+    t = max(flops / PEAK_FLOPS, hbm_bytes / HBM_BW)
+    t += grid_steps * GRID_STEP_OVERHEAD_S
+    if vmem_bytes > VMEM_BUDGET_BYTES:
+        t *= 1e3  # does not fit: effectively reject
+    return t
+
+
+def choose(key: str, axes: Sequence[tuple[int, int, int]],
+           score_fn: Callable[[Sequence[int]], float]) -> tuple[int, ...]:
+    """Pick one block size per ``(n, target, multiple_of)`` axis.
+
+    With autotuning off this is exactly the legacy per-axis
+    :func:`pick_block`.  Otherwise a measured cache entry for ``key``
+    wins; failing that, the lowest ``score_fn`` over the cartesian
+    candidate set (ties to the largest blocks)."""
+    memo_key = (key, enabled())
+    if memo_key in _MEMO:
+        return _MEMO[memo_key]
+    if not enabled():
+        blocks = tuple(pick_block(*a) for a in axes)
+    else:
+        ent = _load_cache().get(key)
+        if ent and len(ent.get("blocks", ())) == len(axes):
+            blocks = tuple(int(b) for b in ent["blocks"])
+        else:
+            import itertools
+
+            cands = [block_candidates(*a) for a in axes]
+            blocks = min(itertools.product(*cands),
+                         key=lambda bl: (score_fn(bl),
+                                         tuple(-b for b in bl)))
+    _MEMO[memo_key] = blocks
+    return blocks
+
+
+# ---------------------------------------------------------------------------
+# Per-kernel shape keys, constraints and cost models
+# ---------------------------------------------------------------------------
+
+
+def gemm_key(M: int, K: int, N: int, scheme: str, group_size: int) -> str:
+    return f"gemm:{M}x{K}x{N}:{scheme}:g{group_size}"
+
+
+def gemm_blocks(M: int, K: int, N: int, *, scheme: str,
+                group_size: int = 32) -> tuple[int, int, int]:
+    """(bm, bn, bk) for ``lut_dequant_gemm`` under the scheme's scale-
+    block divisibility constraints."""
+    if scheme == "tile":
+        mk, mn = 2, group_size // 2
+    else:
+        mk, mn = group_size, 2
+    axes = [(M, 128, 1), (N, 256, mn), (K, 128, mk)]
+
+    def score(bl):
+        bm, bn, bk = bl
+        steps = (M // bm) * (N // bn) * (K // bk)
+        # x streams once per N-block, codes once per M-block, out once
+        hbm = (M * K * 4) * (N // bn) + (K * N // 2) * (M // bm) + M * N * 4
+        vmem = (bm * bk + 2 * bk * bn + 2 * bm * bn) * 4
+        return _roofline_score(2.0 * M * N * K, hbm, steps, vmem)
+
+    return choose(gemm_key(M, K, N, scheme, group_size), axes, score)
+
+
+def attn_key(BH: int, Sq: int, Skv: int, D: int, bq_target: int = 128,
+             bkv_target: int = 128) -> str:
+    return f"attn:{BH}x{Sq}x{Skv}x{D}:t{bq_target}x{bkv_target}"
+
+
+def attn_blocks(BH: int, Sq: int, Skv: int, D: int, *, bq_target: int = 128,
+                bkv_target: int = 128) -> tuple[int, int]:
+    """(bq, bkv) for ``lut_softmax_attention``."""
+    axes = [(Sq, bq_target, 1), (Skv, bkv_target, 1)]
+
+    def score(bl):
+        bq, bkv = bl
+        steps = BH * (Sq // bq) * (Skv // bkv)
+        hbm = BH * (Sq * D * 2 + 2 * Skv * D * 2 * (Sq // bq) + Sq * D * 2)
+        vmem = (bq * D + 2 * bkv * D) * 2 + bq * D * 4 + bq * bkv * 4
+        return _roofline_score(4.0 * BH * Sq * Skv * D, hbm, steps, vmem)
+
+    return choose(attn_key(BH, Sq, Skv, D, bq_target, bkv_target), axes,
+                  score)
+
+
+def quantize_key(K: int, N: int) -> str:
+    return f"quantize:{K}x{N}"
+
+
+def quantize_blocks(K: int, N: int) -> tuple[int, int]:
+    """(bk, bn) for ``tile_quantize``."""
+    axes = [(K, 128, 1), (N, 256, 1)]
+
+    def score(bl):
+        bk, bn = bl
+        steps = (K // bk) * (N // bn)
+        hbm = K * N * 4 + K * N // 2
+        vmem = bk * bn * 6
+        return _roofline_score(4.0 * K * N, hbm, steps, vmem)
+
+    return choose(quantize_key(K, N), axes, score)
+
+
+def dequant_key(R: int, H: int, D: int, mode: str) -> str:
+    return f"dequant_kv:{R}x{H}x{D}:{mode}"
+
+
+def dequant_rows(R: int, H: int, D: int, mode: str) -> int:
+    """Row-block size for ``lut_dequant_kv`` (token-slab dequant)."""
+    axes = [(R, 256, 1)]
+    slab_in = H * (D // 2 if mode == "q4" else D) + H * D // 8
+    slab_out = H * D * 4
+
+    def score(bl):
+        (br,) = bl
+        steps = R // br
+        return _roofline_score(2.0 * R * H * D, R * (slab_in + slab_out),
+                               steps, br * (slab_in + slab_out))
+
+    (br,) = choose(dequant_key(R, H, D, mode), axes, score)
+    return br

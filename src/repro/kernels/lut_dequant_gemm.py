@@ -80,10 +80,17 @@ def lut_dequant_gemm(x, codes, scales, codebook, *, scheme: str = "tile",
     M, K = x.shape
     Kc, Nh = codes.shape
     N = Nh * 2
-    assert Kc == K
+    if Kc != K:
+        raise ValueError(
+            f"lut_dequant_gemm: codes have {Kc} rows but x has K={K} "
+            f"columns (x {x.shape} vs codes {codes.shape})")
     out_dtype = out_dtype or x.dtype
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    if M % bm or N % bn or K % bk:
+        raise ValueError(
+            f"lut_dequant_gemm: block sizes must divide the GEMM shape, "
+            f"got (M, N, K) = ({M}, {N}, {K}) with "
+            f"(bm, bn, bk) = ({bm}, {bn}, {bk})")
     nk = K // bk
     g = group_size
 
@@ -111,3 +118,59 @@ def lut_dequant_gemm(x, codes, scales, codebook, *, scheme: str = "tile",
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, codes, scales, codebook.reshape(1, 16))
+
+
+# ---------------------------------------------------------------------------
+# Dequant-only variant over KV token slabs (the vlut16 story applied to
+# gathered quantized-KV views, e.g. the partial-prefill prefix gather)
+# ---------------------------------------------------------------------------
+
+
+def _kv_kernel(codes_ref, scales_ref, cb_ref, o_ref, *, mode: str, gr: int,
+               gc: int):
+    codes = codes_ref[...]                           # (br, H, Dc)
+    s = scales_ref[...].astype(jnp.float32)          # (br, H//gr, D//gc)
+    s = jnp.repeat(jnp.repeat(s, gr, axis=-2), gc, axis=-1)
+    if mode == "q8":
+        vals = codes.astype(jnp.float32)
+    else:
+        # unpack two int4 per byte (low nibble = even dim), vlut16 gather
+        br, H, Dc = codes.shape
+        lo = (codes & 0xF).astype(jnp.int32)
+        hi = (codes >> 4).astype(jnp.int32)
+        idx = jnp.stack([lo, hi], axis=-1).reshape(br, H, Dc * 2)
+        vals = jnp.take(cb_ref[0], idx, axis=0)
+    o_ref[...] = (vals * s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "gr", "gc", "br",
+                                             "interpret", "out_dtype"))
+def lut_dequant_kv(codes, scales, codebook, *, mode: str, gr: int, gc: int,
+                   br: int = 256, interpret: bool = True,
+                   out_dtype=jnp.float32):
+    """Dequantize (R, Hkv, Dc) KV token-slab codes with (R, Hkv//gr,
+    D//gc) tile scales to (R, Hkv, D) — the kernel twin of
+    ``repro.serving.kv_quant.dequantize_kv`` (same unpack, codebook
+    lookup, scale broadcast and multiply per element, so the outputs are
+    bit-identical).  Grid walks R in ``br``-row blocks.
+    """
+    R, H, Dc = codes.shape
+    D = Dc * 2 if mode == "q4" else Dc
+    Hs, Ds = scales.shape[-2:]
+    br = min(br, R)
+    if R % br:
+        raise ValueError(f"lut_dequant_kv: row block br={br} must divide "
+                         f"the {R} gathered token slabs")
+    kern = functools.partial(_kv_kernel, mode=mode, gr=gr, gc=gc)
+    return pl.pallas_call(
+        kern,
+        grid=(R // br,),
+        in_specs=[
+            pl.BlockSpec((br, H, Dc), lambda i: (i, 0, 0)),
+            pl.BlockSpec((br, Hs, Ds), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 16), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, H, D), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, H, D), out_dtype),
+        interpret=interpret,
+    )(codes, scales, codebook.reshape(1, 16))

@@ -138,7 +138,11 @@ def lut_softmax_attention(q, k, v, lut, *, causal: bool = True, bq: int = 128,
     BH, Sq, D = q.shape
     _, Skv, _ = k.shape
     bq, bkv = min(bq, Sq), min(bkv, Skv)
-    assert Sq % bq == 0 and Skv % bkv == 0
+    if Sq % bq or Skv % bkv:
+        raise ValueError(
+            f"lut_softmax_attention: block sizes must divide the sequence "
+            f"lengths, got Sq={Sq} with bq={bq} (Sq % bq = {Sq % bq}) and "
+            f"Skv={Skv} with bkv={bkv} (Skv % bkv = {Skv % bkv})")
     nq, nkv = Sq // bq, Skv // bkv
     scale = 1.0 / math.sqrt(D)
 

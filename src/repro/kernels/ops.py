@@ -8,11 +8,13 @@ real TPU set ``repro.kernels.ops.INTERPRET = False`` (or env
 from __future__ import annotations
 
 import functools
+import math
 import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _autotune
 from repro.kernels import lut_dequant_gemm as _gemm
 from repro.kernels import lut_softmax_attention as _attn
 from repro.kernels import paged_attention as _paged
@@ -27,38 +29,49 @@ _EXP_LUT = None
 def exp_lut():
     global _EXP_LUT
     if _EXP_LUT is None:
-        _EXP_LUT = _attn.build_exp_lut()
+        # built eagerly even when first requested under a jit trace (e.g.
+        # inside the engine's scanned decode step) — caching a traced
+        # value here would leak the tracer into every later caller
+        with jax.ensure_compile_time_eval():
+            _EXP_LUT = _attn.build_exp_lut()
     return _EXP_LUT
 
 
 def _pick_block(n: int, target: int, multiple_of: int = 1) -> int:
     """Largest divisor of n that is <= target and a multiple of
-    ``multiple_of`` (falls back to n itself)."""
-    b = min(n, target)
-    while b > 1 and (n % b or b % multiple_of):
-        b -= 1
-    if b <= 1 or b % multiple_of:
-        return n
-    return b
+    ``multiple_of`` (falls back to n itself).  Raises ``ValueError`` when
+    no valid block exists — i.e. ``n`` itself violates ``multiple_of``
+    (previously returned silently, truncating downstream BlockSpecs)."""
+    return _autotune.pick_block(n, target, multiple_of)
+
+
+def plan_lut_dequant_matmul(qw: dict, *, m: int, group_size: int = 32):
+    """Resolve scheme inference and block-size selection once for a fixed
+    (M, K, N) and return a callable ``x -> x @ dequant(qw)``.
+
+    The returned closure goes straight to the jitted kernel — no per-call
+    Python scheme/shape work, which is what hot loops (and fair timed
+    ablations, see ``benchmarks/kernel_ablation.fig15_dequant_gemm``)
+    should pay."""
+    codes, scales, codebook = qw["codes"], qw["scales"], qw["codebook"]
+    scheme = TQ.infer_scheme(qw, group_size)
+    K = codes.shape[0]
+    N = codes.shape[1] * 2
+    bm, bn, bk = _autotune.gemm_blocks(m, K, N, scheme=scheme,
+                                       group_size=group_size)
+
+    def run(x):
+        return _gemm.lut_dequant_gemm(
+            x, codes, scales, codebook, scheme=scheme,
+            group_size=group_size, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+
+    return run
 
 
 def lut_dequant_matmul(x, qw: dict, *, group_size: int = 32):
     """x: (M, K); qw: quantized-weight leaf dict -> (M, N)."""
-    codes, scales = qw["codes"], qw["scales"]
-    scheme = TQ.infer_scheme(qw, group_size)
-    M, K = x.shape
-    N = codes.shape[1] * 2
-    bm = _pick_block(M, 128)
-    # block sizes must respect group geometry
-    if scheme == "tile":
-        bk = _pick_block(K, 128, multiple_of=2)
-        bn = _pick_block(N, 256, multiple_of=group_size // 2)
-    else:
-        bk = _pick_block(K, 128, multiple_of=group_size)
-        bn = _pick_block(N, 256, multiple_of=2)
-    return _gemm.lut_dequant_gemm(
-        x, codes, scales, qw["codebook"], scheme=scheme,
-        group_size=group_size, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+    return plan_lut_dequant_matmul(qw, m=x.shape[0],
+                                   group_size=group_size)(x)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, exp_mode: str = "lut",
@@ -76,15 +89,17 @@ def flash_attention(q, k, v, *, causal: bool = True, exp_mode: str = "lut",
         B * Hq, Skv, D).astype(jnp.float16)
     vt = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(
         B * Hq, Skv, D).astype(jnp.float16)
+    bq_pick, bkv_pick = _autotune.attn_blocks(B * Hq, Sq, Skv, D,
+                                              bq_target=bq, bkv_target=bkv)
     o = _attn.lut_softmax_attention(
         qt, kt, vt, exp_lut(), causal=causal,
-        bq=_pick_block(Sq, bq), bkv=_pick_block(Skv, bkv),
-        interpret=INTERPRET, exp_mode=exp_mode)
+        bq=bq_pick, bkv=bkv_pick, interpret=INTERPRET, exp_mode=exp_mode)
     return o.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3).astype(q.dtype)
 
 
 def paged_flash_decode(q, k_pool, v_pool, table, cache_len, *,
-                       window: int = 0, softcap: float = 0.0):
+                       window: int = 0, softcap: float = 0.0,
+                       exp_mode: str = "exact"):
     """Paged decode attention through the block-table-walking kernel.
 
     q: (B, 1, Hq, D); pools: (n_blocks, bs, Hkv, D) fp arrays *or*
@@ -93,24 +108,58 @@ def paged_flash_decode(q, k_pool, v_pool, table, cache_len, *,
     int32; cache_len: (B,) int32 including the current token.  Returns
     (B, 1, Hq, D) in q.dtype — drop-in for ``layers.paged_decode_attention``
     (the XLA gather fallback) on the TPU hot path.
+
+    ``exp_mode='lut'`` runs the fp16 LUT-softmax recurrence (Alg. 1)
+    inside the same table walk — block gather + VMEM dequant + LUT exp in
+    one pass; ``'exact'`` keeps the f32 recurrence.
     """
     B, _, Hq, D = q.shape
     quantized = isinstance(k_pool, dict)
     Hkv = (k_pool["codes"] if quantized else k_pool).shape[2]
     G = Hq // Hkv
     qg = q.reshape(B, Hkv, G, D)
+    lut = exp_lut() if exp_mode == "lut" else None
     fn = _paged.quant_paged_attention if quantized else _paged.paged_attention
-    o = fn(qg, k_pool, v_pool, table, cache_len, window=window,
-           softcap=softcap, interpret=INTERPRET)
+    o = fn(qg, k_pool, v_pool, table, cache_len, lut, window=window,
+           softcap=softcap, interpret=INTERPRET, exp_mode=exp_mode)
     return o.reshape(B, 1, Hq, D)
+
+
+def lut_dequant_gather(gathered):
+    """Dequantize a gathered quantized-pool view through the vlut16
+    dequant kernel (identity on fp arrays).
+
+    ``gathered``: {"codes", "scales"} leaf dict with arbitrary leading
+    dims over the (Hkv, D) token slab — e.g. the (L, B, P, ...) prefix
+    view of the engine's partial prefill.  Bit-identical to
+    ``repro.serving.kv_quant.dequantize_kv`` (same unpack, codebook take,
+    scale broadcast and multiply, per element), so swapping it into read
+    paths cannot change greedy outputs.
+    """
+    if not isinstance(gathered, dict):
+        return gathered
+    from repro.quant.codebooks import get_codebook
+    from repro.serving.kv_quant import Q4_CODEBOOK, kv_geometry
+
+    mode, gr, gc, d = kv_geometry(gathered)
+    codes, scales = gathered["codes"], gathered["scales"]
+    lead = codes.shape[:-2]
+    r = math.prod(lead) if lead else 1
+    br = _autotune.dequant_rows(r, codes.shape[-2], d, mode)
+    out = _gemm.lut_dequant_kv(
+        codes.reshape(r, *codes.shape[-2:]),
+        scales.reshape(r, *scales.shape[-2:]),
+        get_codebook(Q4_CODEBOOK), mode=mode, gr=gr, gc=gc, br=br,
+        interpret=INTERPRET)
+    return out.reshape(*lead, codes.shape[-2], d)
 
 
 def tile_quantize_op(w, *, group_size: int = 32):
     """Kernel-quantize a (K, N) weight -> quantized leaf dict."""
     K, N = w.shape
+    bk, bn = _autotune.quantize_blocks(K, N)
     codes, scales = _tq.tile_quantize(
-        w, group_size=group_size, bk=_pick_block(K, 128),
-        bn=_pick_block(N, 256), interpret=INTERPRET)
+        w, group_size=group_size, bk=bk, bn=bn, interpret=INTERPRET)
     from repro.quant.codebooks import get_codebook
 
     return {"codes": codes, "scales": scales, "codebook": get_codebook("q4_0")}

@@ -5,8 +5,10 @@ live in a shared block pool ``(n_blocks, bs, Hkv, D)`` and each sequence
 maps logical positions to pool blocks through a block table (block ``w``
 of a row holds positions ``[w·bs, (w+1)·bs)``).
 
-The block table and the per-row lengths ride in as **scalar-prefetch**
-arguments (``pltpu.PrefetchScalarGridSpec``): the grid walks
+The block table, the per-row lengths and the sliding window ride in as
+**scalar-prefetch** arguments (``pltpu.PrefetchScalarGridSpec``; the
+window is dynamic because the model threads per-layer windows through
+the layer scan as traced int32): the grid walks
 ``(B, Hkv, W)`` with the block index innermost, and the K/V BlockSpec
 index maps dereference ``table[b, j]`` so the DMA engine fetches exactly
 the row's j-th block — no (B, W·bs, …) gather is ever materialized, which
@@ -14,11 +16,20 @@ is the point: HBM traffic per step is the *live* KV, not the ``max_len``
 reservation.  Table padding points at the reserved scratch block 0; its
 contents are masked out via ``lengths`` like any past-the-end position.
 
-Online-softmax accumulation (m/l/acc in VMEM scratch) is plain FP32 — the
-paged kernel is about the memory layout; the LUT-exp FP16 variant lives in
-``lut_softmax_attention``.  The identical-semantics XLA fallback used on
-CPU is ``repro.models.layers.paged_decode_attention``; the pure-jnp oracle
-is ``repro.kernels.ref.paged_decode_attention_ref``.
+Online-softmax accumulation (m/l/acc in VMEM scratch) is plain FP32 by
+default; ``exp_mode='lut'`` instead runs the fp16 LUT-softmax recurrence
+of ``lut_softmax_attention`` (paper Alg. 1) inside the same table walk —
+the exp LUT rides in as a broadcast input exactly like there, so decode
+does block gather + (de)quant + LUT softmax in one fused pass.  The
+identical-semantics XLA fallback used on CPU is
+``repro.models.layers.paged_decode_attention``; the pure-jnp oracles are
+``repro.kernels.ref.paged_decode_attention_ref`` (exact) and
+``ref.lut_paged_decode_attention_ref`` (fp16/LUT recurrence).
+
+Fully-masked blocks (a ``lengths[b] == 0`` row, or table padding past the
+row's last block) are guarded: ``p`` is zeroed on masked positions, so
+``m_new == m_prev == -inf`` can no longer turn ``exp(0) == 1`` into
+scratch-garbage accumulation — a zero-length row returns exactly 0.
 
 :func:`quant_paged_attention` is the same walk over a *tile-quantized*
 pool (``repro.serving.kv_quant``): the BlockSpec index maps dereference
@@ -45,19 +56,71 @@ try:
 except Exception:  # pragma: no cover
     pltpu = None
 
+from repro.kernels.lut_softmax_attention import NEG_CAP, _lut_exp
+
 NEG_INF = -1e30
 
 
-def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, n_blk: int, block_size: int,
-            scale: float, window: int, softcap: float):
+def _block_mask(s, len_ref, win_ref, j, block_size):
+    """(G, bs) validity of this block's kv positions for row b.
+
+    The window rides in as a scalar-prefetch value (w <= 0 = unbounded)
+    because the model threads per-layer windows through the layer scan as
+    traced int32 — it cannot be a static kernel parameter."""
     b = pl.program_id(0)
+    seq_len = len_ref[b]
+    w = win_ref[0]
+    q_pos = seq_len - 1
+    kv_pos = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)                       # (G, bs)
+    valid = kv_pos < seq_len
+    valid &= (w <= 0) | (q_pos - kv_pos < w)
+    return valid
+
+
+def _softmax_update(s, valid, v, lut_ref, acc_ref, m_ref, l_ref, *,
+                    exp_mode: str):
+    """One block's online-softmax accumulation.
+
+    ``'exact'`` is the f32 recurrence; ``'lut'`` the fp16 Alg. 1
+    recurrence with table-lookup exp (m scratch is fp16 there).  Both
+    zero ``p`` on masked positions: in a fully-masked block
+    ``m_new == m_prev`` makes the raw ``exp(s - m_new)`` equal 1 per
+    masked position, which would accumulate garbage for zero-length rows
+    and table padding.
+    """
+    m_prev = m_ref[...]
+    if exp_mode == "lut":
+        s16 = jnp.where(valid, s, NEG_CAP).astype(jnp.float16)
+        m_new = jnp.maximum(m_prev, jnp.max(s16, axis=-1, keepdims=True))
+        p = _lut_exp(lut_ref, s16 - m_new)
+        corr = _lut_exp(lut_ref, m_prev - m_new).astype(jnp.float32)
+        v = v.astype(jnp.float16)
+    else:
+        sm = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(sm, axis=-1, keepdims=True))
+        p = jnp.exp(sm - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        v = v.astype(jnp.float32)
+    p = jnp.where(valid, p, jnp.zeros_like(p))
+    l_ref[...] = (l_ref[...] * corr +
+                  jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True))
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+
+def _kernel(table_ref, len_ref, win_ref, q_ref, k_ref, v_ref, lut_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, n_blk: int, block_size: int,
+            scale: float, softcap: float, exp_mode: str):
     j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        m_ref[...] = jnp.full_like(
+            m_ref, NEG_CAP if exp_mode == "lut" else NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
     q = q_ref[0, 0]                                  # (G, D)
@@ -68,25 +131,9 @@ def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                             preferred_element_type=jnp.float32) * scale
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
-    seq_len = len_ref[b]
-    q_pos = seq_len - 1
-    kv_pos = j * block_size + jax.lax.broadcasted_iota(
-        jnp.int32, s.shape, 1)                       # (G, bs)
-    valid = kv_pos < seq_len
-    if window > 0:
-        valid &= q_pos - kv_pos < window
-    s = jnp.where(valid, s, NEG_INF)
-
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
-    pv = jax.lax.dot_general(p, v.astype(jnp.float32),
-                             (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    acc_ref[...] = acc_ref[...] * corr + pv
-    m_ref[...] = m_new
+    valid = _block_mask(s, len_ref, win_ref, j, block_size)
+    _softmax_update(s, valid, v, lut_ref, acc_ref, m_ref, l_ref,
+                    exp_mode=exp_mode)
 
     @pl.when(j == n_blk - 1)
     def _flush():
@@ -94,37 +141,64 @@ def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "softcap",
-                                             "interpret"))
-def paged_attention(q, k_pool, v_pool, table, lengths, *, window: int = 0,
-                    softcap: float = 0.0, interpret: bool = True):
+def _lut_input(lut, exp_mode: str):
+    """The broadcast LUT input: the real table under ``'lut'`` (required),
+    a 1-element placeholder otherwise (the kernel never reads it)."""
+    if exp_mode not in ("exact", "lut"):
+        raise ValueError(f"exp_mode must be 'exact' or 'lut', "
+                         f"got {exp_mode!r}")
+    if exp_mode == "lut":
+        if lut is None:
+            raise ValueError("exp_mode='lut' needs the exp LUT "
+                             "(repro.kernels.ops.exp_lut())")
+        return lut
+    return jnp.zeros((1, 1), jnp.float16)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret",
+                                             "exp_mode"))
+def paged_attention(q, k_pool, v_pool, table, lengths, lut=None, *,
+                    window=0, softcap: float = 0.0,
+                    interpret: bool = True, exp_mode: str = "exact"):
     """q: (B, Hkv, G, D); pools: (n_blocks, bs, Hkv, D); table: (B, W)
     int32 block ids (padding = scratch block 0); lengths: (B,) int32
     including the current token.  Returns (B, Hkv, G, D) in q.dtype.
+    ``window`` may be a python int or a traced int32 scalar (the model's
+    per-layer windows ride through the layer scan); <= 0 = unbounded.
+
+    ``exp_mode='lut'`` runs the fp16 LUT-softmax recurrence; ``lut`` is
+    then the (1, 32768) exp table (``lut_softmax_attention.build_exp_lut``)
+    riding in as a broadcast input.
     """
     B, Hkv, G, D = q.shape
     _, bs, _, _ = k_pool.shape
     W = table.shape[1]
     scale = 1.0 / math.sqrt(D)
+    lut = _lut_input(lut, exp_mode)
+    lut_w = lut.shape[1]
+    m_dtype = jnp.float16 if exp_mode == "lut" else jnp.float32
+    win = jnp.asarray(window, jnp.int32).reshape(1)
 
     kern = functools.partial(_kernel, n_blk=W, block_size=bs, scale=scale,
-                             window=window, softcap=softcap)
+                             softcap=softcap, exp_mode=exp_mode)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, Hkv, W),
         in_specs=[
             pl.BlockSpec((1, 1, G, D),
-                         lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+                         lambda b, h, j, tbl, lens, win: (b, h, 0, 0)),
             pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0)),
+                         lambda b, h, j, tbl, lens, win: (tbl[b, j], 0, h, 0)),
             pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0)),
+                         lambda b, h, j, tbl, lens, win: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, lut_w),
+                         lambda b, h, j, tbl, lens, win: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, G, D),
-                               lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+                               lambda b, h, j, tbl, lens, win: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, D), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), m_dtype),
             pltpu.VMEM((G, 1), jnp.float32),
         ],
     )
@@ -133,7 +207,8 @@ def paged_attention(q, k_pool, v_pool, table, lengths, *, window: int = 0,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
         interpret=interpret,
-    )(table.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)
+    )(table.astype(jnp.int32), lengths.astype(jnp.int32), win, q, k_pool,
+      v_pool, lut)
 
 
 # ---------------------------------------------------------------------------
@@ -155,17 +230,17 @@ def _dequant_block(codes, scales, cb, *, mode: str, gc: int):
     return jnp.take(cb, idx, axis=0) * s  # vlut16 analogue (§5.2.2)
 
 
-def _quant_kernel(table_ref, len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
-                  cb_ref, o_ref, acc_ref, m_ref, l_ref, *, n_blk: int,
-                  block_size: int, scale: float, window: int, softcap: float,
-                  mode: str, gc: int):
-    b = pl.program_id(0)
+def _quant_kernel(table_ref, len_ref, win_ref, q_ref, kc_ref, ks_ref, vc_ref,
+                  vs_ref, cb_ref, lut_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  n_blk: int, block_size: int, scale: float,
+                  softcap: float, mode: str, gc: int, exp_mode: str):
     j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        m_ref[...] = jnp.full_like(
+            m_ref, NEG_CAP if exp_mode == "lut" else NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
     cb = cb_ref[0]                                   # (16,) f32
@@ -179,24 +254,9 @@ def _quant_kernel(table_ref, len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
                             preferred_element_type=jnp.float32) * scale
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
-    seq_len = len_ref[b]
-    q_pos = seq_len - 1
-    kv_pos = j * block_size + jax.lax.broadcasted_iota(
-        jnp.int32, s.shape, 1)                       # (G, bs)
-    valid = kv_pos < seq_len
-    if window > 0:
-        valid &= q_pos - kv_pos < window
-    s = jnp.where(valid, s, NEG_INF)
-
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
-    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    acc_ref[...] = acc_ref[...] * corr + pv
-    m_ref[...] = m_new
+    valid = _block_mask(s, len_ref, win_ref, j, block_size)
+    _softmax_update(s, valid, v, lut_ref, acc_ref, m_ref, l_ref,
+                    exp_mode=exp_mode)
 
     @pl.when(j == n_blk - 1)
     def _flush():
@@ -204,11 +264,11 @@ def _quant_kernel(table_ref, len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "softcap",
-                                             "interpret"))
-def quant_paged_attention(q, k_pool, v_pool, table, lengths, *,
-                          window: int = 0, softcap: float = 0.0,
-                          interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret",
+                                             "exp_mode"))
+def quant_paged_attention(q, k_pool, v_pool, table, lengths, lut=None, *,
+                          window=0, softcap: float = 0.0,
+                          interpret: bool = True, exp_mode: str = "exact"):
     """Paged decode attention over a tile-quantized block pool.
 
     q: (B, Hkv, G, D); ``k_pool``/``v_pool``: {"codes", "scales"} leaf
@@ -217,6 +277,10 @@ def quant_paged_attention(q, k_pool, v_pool, table, lengths, *,
     table: (B, W) int32 block ids; lengths: (B,) int32 including the
     current token.  Returns (B, Hkv, G, D) in q.dtype.  Geometry is
     inferred from the leaf shapes (static under jit).
+
+    ``exp_mode='lut'`` fuses the fp16 LUT softmax onto the same walk:
+    table deref + VMEM dequant + table-lookup exp in one pass (``lut`` =
+    the (1, 32768) exp table as a broadcast input, like the codebook).
     """
     from repro.serving.kv_quant import Q4_CODEBOOK, kv_geometry
 
@@ -231,34 +295,40 @@ def quant_paged_attention(q, k_pool, v_pool, table, lengths, *,
     from repro.quant.codebooks import get_codebook
 
     cb = get_codebook(Q4_CODEBOOK).reshape(1, 16)    # unused under q8
+    lut = _lut_input(lut, exp_mode)
+    lut_w = lut.shape[1]
+    m_dtype = jnp.float16 if exp_mode == "lut" else jnp.float32
+    win = jnp.asarray(window, jnp.int32).reshape(1)
 
     kern = functools.partial(_quant_kernel, n_blk=W, block_size=bs,
-                             scale=scale, window=window, softcap=softcap,
-                             mode=mode, gc=gc)
-    code_spec = pl.BlockSpec((1, bs, 1, dc),
-                             lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0))
+                             scale=scale, softcap=softcap,
+                             mode=mode, gc=gc, exp_mode=exp_mode)
+    code_spec = pl.BlockSpec(
+        (1, bs, 1, dc),
+        lambda b, h, j, tbl, lens, win: (tbl[b, j], 0, h, 0))
     # one scale tile row covers gr adjacent heads: head h reads row h//gr,
     # so the pair's scales stream in once per (h, j) step, unit-stride
     scale_spec = pl.BlockSpec(
         (1, bs, 1, sd),
-        lambda b, h, j, tbl, lens: (tbl[b, j], 0, h // gr, 0))
+        lambda b, h, j, tbl, lens, win: (tbl[b, j], 0, h // gr, 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, Hkv, W),
         in_specs=[
             pl.BlockSpec((1, 1, G, D),
-                         lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+                         lambda b, h, j, tbl, lens, win: (b, h, 0, 0)),
             code_spec,
             scale_spec,
             code_spec,
             scale_spec,
-            pl.BlockSpec((1, 16), lambda b, h, j, tbl, lens: (0, 0)),
+            pl.BlockSpec((1, 16), lambda b, h, j, tbl, lens, win: (0, 0)),
+            pl.BlockSpec((1, lut_w), lambda b, h, j, tbl, lens, win: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, G, D),
-                               lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+                               lambda b, h, j, tbl, lens, win: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, D), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), m_dtype),
             pltpu.VMEM((G, 1), jnp.float32),
         ],
     )
@@ -267,6 +337,6 @@ def quant_paged_attention(q, k_pool, v_pool, table, lengths, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
         interpret=interpret,
-    )(table.astype(jnp.int32), lengths.astype(jnp.int32), q,
+    )(table.astype(jnp.int32), lengths.astype(jnp.int32), win, q,
       k_pool["codes"], k_pool["scales"], v_pool["codes"], v_pool["scales"],
-      cb)
+      cb, lut)

@@ -104,6 +104,66 @@ def paged_decode_attention_ref(q, k_pool, v_pool, table, lengths, *,
     return jnp.einsum("bhgk,bkhd->bhgd", p, v_seq.astype(jnp.float32))
 
 
+def lut_paged_decode_attention_ref(q, k_pool, v_pool, table, lengths,
+                                   lut=None, *, window: int = 0,
+                                   softcap: float = 0.0):
+    """Oracle for ``paged_attention(..., exp_mode='lut')``: the fp16
+    Alg. 1 recurrence walked block-by-block through the table in plain
+    jnp, mirroring the kernel's masking/guard order so it must match to
+    ~fp16 resolution.  Fully-masked rows (``lengths == 0``) return 0.
+
+    q: (B, Hkv, G, D); pools: (n_blocks, bs, Hkv, D) fp; table (B, W);
+    lengths (B,).  Returns (B, Hkv, G, D) f32.
+    """
+    if lut is None:
+        lut = build_exp_lut()
+    B, Hkv, G, D = q.shape
+    bs = k_pool.shape[1]
+    W = table.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    m = jnp.full((B, Hkv, G, 1), NEG_CAP, jnp.float16)
+    l = jnp.zeros((B, Hkv, G, 1), jnp.float32)
+    acc = jnp.zeros((B, Hkv, G, D), jnp.float32)
+    for j in range(W):
+        kj = k_pool[table[:, j]]                      # (B, bs, Hkv, D)
+        vj = v_pool[table[:, j]]
+        s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                       kj.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kv_pos = j * bs + jnp.arange(bs)[None]        # (1, bs)
+        valid = kv_pos < lengths[:, None]
+        if window > 0:
+            valid &= (lengths[:, None] - 1) - kv_pos < window
+        vb = valid[:, None, None, :]                  # (B, 1, 1, bs)
+        s16 = jnp.where(vb, s, NEG_CAP).astype(jnp.float16)
+        m_new = jnp.maximum(m, jnp.max(s16, axis=-1, keepdims=True))
+        p = _lut_exp_ref(lut, s16 - m_new)
+        corr = _lut_exp_ref(lut, m - m_new).astype(jnp.float32)
+        p = jnp.where(vb, p, jnp.float16(0))
+        l = l * corr + jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum(
+            "bhgs,bshd->bhgd", p, vj.astype(jnp.float16),
+            preferred_element_type=jnp.float32)
+        m = m_new
+    return acc / jnp.maximum(l, 1e-30)
+
+
+def quant_lut_paged_decode_attention_ref(q, k_pool, v_pool, table, lengths,
+                                         lut=None, *, window: int = 0,
+                                         softcap: float = 0.0):
+    """Oracle for ``quant_paged_attention(..., exp_mode='lut')``:
+    dequantize the whole pool with the reference tile dequantizer, then
+    run the fp16 LUT paged recurrence."""
+    from repro.serving.kv_quant import dequantize_kv
+
+    return lut_paged_decode_attention_ref(
+        q, dequantize_kv(k_pool), dequantize_kv(v_pool), table, lengths,
+        lut, window=window, softcap=softcap)
+
+
 def quant_paged_decode_attention_ref(q, k_pool, v_pool, table, lengths, *,
                                      window: int = 0, softcap: float = 0.0):
     """Oracle for quant_paged_attention: dequantize the *whole* pool with

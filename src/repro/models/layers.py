@@ -13,6 +13,7 @@ file is the XLA path used for dry-runs and CPU execution.
 from __future__ import annotations
 
 import math
+import os
 from functools import partial
 from typing import Optional
 
@@ -290,6 +291,28 @@ def decode_attention(
     return o.reshape(B, 1, Hq, D).astype(q.dtype)
 
 
+PAGED_ATTN_IMPLS = ("xla", "kernel", "kernel_lut")
+_PAGED_ATTN_IMPL = os.environ.get("REPRO_PAGED_ATTN", "xla")
+
+
+def set_paged_attention_impl(impl: str) -> str:
+    """Select the decode-attention backend for paged KV caches.
+
+    ``"xla"`` (default): gather-then-attend fallback below.  ``"kernel"``:
+    fused Pallas block-table walk (``repro.kernels.paged_attention``).
+    ``"kernel_lut"``: same kernel with the fp16 LUT softmax (Alg. 1) fused
+    in.  Returns the previous impl so callers can restore it.  Engines jit
+    their step functions at construction time, so set this *before*
+    building the engine (or via ``REPRO_PAGED_ATTN``).
+    """
+    global _PAGED_ATTN_IMPL
+    if impl not in PAGED_ATTN_IMPLS:
+        raise ValueError(f"unknown paged-attention impl {impl!r}; "
+                         f"expected one of {PAGED_ATTN_IMPLS}")
+    prev, _PAGED_ATTN_IMPL = _PAGED_ATTN_IMPL, impl
+    return prev
+
+
 def paged_decode_attention(
     q: jnp.ndarray,
     k_pool: jnp.ndarray,
@@ -318,6 +341,18 @@ def paged_decode_attention(
     fallback.
     """
     from repro.serving.kv_quant import dequantize_for_pool, pool_block_size
+
+    impl = _PAGED_ATTN_IMPL
+    if impl != "xla":
+        if impl not in PAGED_ATTN_IMPLS:
+            raise ValueError(f"unknown paged-attention impl {impl!r}; "
+                             f"expected one of {PAGED_ATTN_IMPLS}")
+        from repro.kernels import ops as _kops
+
+        return _kops.paged_flash_decode(
+            q, k_pool, v_pool, table, cache_len, window=window,
+            softcap=softcap,
+            exp_mode="lut" if impl == "kernel_lut" else "exact")
 
     B = q.shape[0]
     W = table.shape[1]

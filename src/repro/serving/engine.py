@@ -223,9 +223,11 @@ class DecodeEngine:
         block-granular, so short cached prefixes stop paying attention
         FLOPs over the full ``max_len`` table width.  Quantized pools
         gather code+scale leaves and dequantize the (L, B, P, Hkv, D)
-        prefix view before the transformer consumes it.
+        prefix view through the vlut16 dequant kernel
+        (``repro.kernels.ops.lut_dequant_gather`` — bit-identical to the
+        XLA ``dequantize_for_pool`` path it replaces).
         """
-        from repro.serving.kv_quant import dequantize_for_pool
+        from repro.kernels import ops as kops
 
         bs = self.pool.block_size
         ptab = jax.lax.slice_in_dim(table, 0, prefix_w, axis=1)
@@ -236,7 +238,7 @@ class DecodeEngine:
                 return g.reshape(g.shape[0], g.shape[1], prefix_w * bs,
                                  *g.shape[4:])
 
-            return dequantize_for_pool(jax.tree.map(leaf, pool))
+            return kops.lut_dequant_gather(jax.tree.map(leaf, pool))
 
         prefix = {"k": gather(pool_k), "v": gather(pool_v),
                   "len": cached_lens}

@@ -1,0 +1,90 @@
+"""Snapshot record/check machinery (benchmarks.common) — pure logic."""
+import json
+
+import pytest
+
+from benchmarks import common
+
+
+ROWS = [
+    ("tbl5.lut", 0.0, "max_err=5.2e-04 relRMS=3.4e-04"),
+    ("fig15.fused", 5000.0, "speedup=0.14 (interpret-mode python timing)"),
+    ("serving.kv_quant", 1.5e6,
+     "mode=q8 kv_byte_reduction=73% accuracy=0.600 fp_accuracy=0.700"),
+]
+
+
+def test_parse_metrics_extracts_numbers_only():
+    m = common.parse_metrics(ROWS[2][2])
+    assert m["kv_byte_reduction"] == 73.0
+    assert m["accuracy"] == 0.6
+    assert "mode" not in m  # q8 is not numeric
+    assert common.parse_metrics("free text (no metrics)") == {}
+
+
+def test_snapshot_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    path = common.write_snapshot("t", ROWS)
+    snap = json.load(open(path))
+    assert snap["area"] == "t" and len(snap["rows"]) == 3
+    assert common.check_snapshot("t", ROWS, snap) == []
+
+
+def test_check_flags_missing_row():
+    snap = common.snapshot("t", ROWS)
+    bad = common.check_snapshot("t", ROWS[:-1], snap)
+    assert len(bad) == 1 and "missing" in bad[0]
+
+
+def test_check_flags_error_regression():
+    snap = common.snapshot("t", ROWS)
+    worse = [("tbl5.lut", 0.0, "max_err=5.2e-03 relRMS=3.4e-04")] + ROWS[1:]
+    bad = common.check_snapshot("t", worse, snap)
+    assert len(bad) == 1 and "max_err" in bad[0]
+    # growth inside the ratio envelope is fine
+    ok = [("tbl5.lut", 0.0, "max_err=9.9e-04 relRMS=3.4e-04")] + ROWS[1:]
+    assert common.check_snapshot("t", ok, snap) == []
+
+
+def test_check_flags_reduction_and_accuracy_drops():
+    snap = common.snapshot("t", ROWS)
+    worse = ROWS[:-1] + [("serving.kv_quant", 1.5e6,
+                          "mode=q8 kv_byte_reduction=30% accuracy=0.100 "
+                          "fp_accuracy=0.700")]
+    bad = common.check_snapshot("t", worse, snap)
+    assert any("kv_byte_reduction" in b for b in bad)
+    assert any("accuracy" in b for b in bad)
+
+
+def test_check_time_envelope(monkeypatch):
+    snap = common.snapshot("t", ROWS)
+    # 10x the snapshot (with the 500us floor) trips; anything below rides
+    slow = ROWS[:1] + [("fig15.fused", 5.1e4, ROWS[1][2])] + ROWS[2:]
+    bad = common.check_snapshot("t", slow, snap)
+    assert len(bad) == 1 and "envelope" in bad[0]
+    noisy = ROWS[:1] + [("fig15.fused", 4.9e4, ROWS[1][2])] + ROWS[2:]
+    assert common.check_snapshot("t", noisy, snap) == []
+    # machine-dependent override
+    monkeypatch.setenv("REPRO_BENCH_TIME_FACTOR", "100")
+    assert common.check_snapshot("t", slow, snap) == []
+
+
+def test_committed_snapshots_are_well_formed():
+    """The repo must carry the recorded perf trajectory for both areas."""
+    import os
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    for area in ("kernels", "serving"):
+        path = os.path.join(root, common.snapshot_path(area))
+        assert os.path.exists(path), f"{path} missing"
+        snap = json.load(open(path))
+        assert snap["version"] == 1 and snap["area"] == area
+        assert snap["rows"], f"{path} has no rows"
+
+
+def test_run_snapshot_area_registry():
+    from benchmarks import run as bench_run
+
+    areas = bench_run.snapshot_areas()
+    assert set(areas) == {"kernels", "serving"}
+    assert all(callable(v) for v in areas.values())

@@ -216,3 +216,223 @@ def test_tile_quantize_kernel_vs_oracle(kn):
     assert (np.asarray(ck) == np.asarray(cr)).mean() > 0.999  # rounding ties
     np.testing.assert_allclose(np.asarray(sk, np.float32),
                                np.asarray(sr, np.float32), rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# LUT-fused paged decode (exp_mode='lut')
+# ---------------------------------------------------------------------------
+
+
+def _paged_case(shape, seed_base, pool_kind):
+    """Build a ragged paged-decode case; pools fp or tile-quantized."""
+    from repro.serving import kv_quant as KQ
+
+    B, nb, bs, Hkv, G, W, D = shape
+    rng = np.random.default_rng(B * 100 + bs)
+    q = jax.random.normal(jax.random.fold_in(KEY, seed_base),
+                          (B, Hkv, G, D)) * 0.5
+    pools = []
+    for i in (seed_base + 1, seed_base + 2):
+        fp = jax.random.normal(jax.random.fold_in(KEY, i),
+                               (nb, bs, Hkv, D)) * 0.5
+        if pool_kind == "fp":
+            pools.append(fp)
+        else:
+            gr, gc = KQ.kv_tile_geometry(Hkv, D)
+            pools.append(KQ.quantize_kv(fp, mode=pool_kind, gr=gr, gc=gc))
+    lens = rng.integers(1, W * bs + 1, size=B).astype(np.int32)
+    lens[0] = W * bs
+    table = np.zeros((B, W), np.int32)
+    avail = list(range(1, nb))
+    for b in range(B):
+        n = -(-int(lens[b]) // bs)
+        table[b, :n] = [avail.pop(rng.integers(len(avail))) for _ in range(n)]
+    return q, pools[0], pools[1], jnp.asarray(table), jnp.asarray(lens)
+
+
+@pytest.mark.parametrize("pool_kind", ["fp", "q8", "q4"])
+@pytest.mark.parametrize("shape", [(2, 14, 4, 2, 4, 6, 32),
+                                   (1, 8, 8, 1, 1, 4, 64)])
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (6, 30.0)])
+def test_lut_paged_attention_kernel_vs_oracle(pool_kind, shape, window,
+                                              softcap):
+    """exp_mode='lut': the fused fp16 LUT-softmax table walk must match
+    the blocked fp16 LUT oracle over fp, Q8 and packed-Q4 pools."""
+    B, nb, bs, Hkv, G, W, D = shape
+    q, k_pool, v_pool, table, lens = _paged_case(shape, 50, pool_kind)
+    o = ops.paged_flash_decode(q.reshape(B, 1, Hkv * G, D), k_pool, v_pool,
+                               table, lens, window=window, softcap=softcap,
+                               exp_mode="lut")
+    fn = (ref.lut_paged_decode_attention_ref if pool_kind == "fp"
+          else ref.quant_lut_paged_decode_attention_ref)
+    o_ref = fn(q, k_pool, v_pool, table, lens, window=window,
+               softcap=softcap)
+    np.testing.assert_allclose(np.asarray(o.reshape(B, Hkv, G, D)),
+                               np.asarray(o_ref), atol=2e-3)
+
+
+@pytest.mark.parametrize("pool_kind", ["fp", "q8"])
+def test_lut_paged_attention_accuracy_vs_f32(pool_kind):
+    """Table-5 envelope on the paged decode path: the fused LUT-fp16
+    recurrence stays within ~2e-2 of the exact-f32 oracle."""
+    shape = (2, 14, 4, 2, 4, 6, 32)
+    B, nb, bs, Hkv, G, W, D = shape
+    q, k_pool, v_pool, table, lens = _paged_case(shape, 60, pool_kind)
+    o = ops.paged_flash_decode(q.reshape(B, 1, Hkv * G, D), k_pool, v_pool,
+                               table, lens, exp_mode="lut")
+    fn = (ref.paged_decode_attention_ref if pool_kind == "fp"
+          else ref.quant_paged_decode_attention_ref)
+    o32 = fn(q, k_pool, v_pool, table, lens)
+    err = float(jnp.abs(o.reshape(B, Hkv, G, D).astype(jnp.float32)
+                        - o32).max())
+    assert err < 2e-2, err
+
+
+@pytest.mark.parametrize("pool_kind", ["fp", "q8", "q4"])
+@pytest.mark.parametrize("exp_mode", ["exact", "lut"])
+def test_paged_attention_zero_length_row(pool_kind, exp_mode):
+    """A slot with lengths[b] == 0 (empty/just-freed row in a live batch)
+    must contribute exactly 0 — before the all-masked guard, every block's
+    p was exp(s - m) with m == s (all-masked), i.e. 1, so the kernel
+    silently averaged garbage pool contents into the output."""
+    shape = (3, 14, 4, 2, 2, 4, 32)
+    B, nb, bs, Hkv, G, W, D = shape
+    q, k_pool, v_pool, table, lens = _paged_case(shape, 70, pool_kind)
+    lens = lens.at[1].set(0)
+    o = ops.paged_flash_decode(q.reshape(B, 1, Hkv * G, D), k_pool, v_pool,
+                               table, lens, exp_mode=exp_mode)
+    o = o.reshape(B, Hkv, G, D)
+    assert float(jnp.abs(o[1]).max()) == 0.0
+    # live rows are untouched by the guard
+    if exp_mode == "exact":
+        fn = (ref.paged_decode_attention_ref if pool_kind == "fp"
+              else ref.quant_paged_decode_attention_ref)
+        atol = 2e-5
+    else:
+        fn = (ref.lut_paged_decode_attention_ref if pool_kind == "fp"
+              else ref.quant_lut_paged_decode_attention_ref)
+        atol = 2e-3
+    o_ref = fn(q, k_pool, v_pool, table, lens)
+    for b in (0, 2):
+        np.testing.assert_allclose(np.asarray(o[b]), np.asarray(o_ref[b]),
+                                   atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# vlut16 gather dequant + plan wrapper
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["q8", "q4"])
+def test_lut_dequant_gather_bitwise(mode):
+    """The kernel twin of dequantize_kv must be bit-identical on the
+    (L, B, P, Hkv, D) prefix-gather views the engine produces."""
+    from repro.serving import kv_quant as KQ
+
+    x = jax.random.normal(jax.random.fold_in(KEY, 80), (3, 2, 8, 2, 32))
+    qd = KQ.quantize_kv(x, mode=mode, gr=2, gc=16)
+    a = KQ.dequantize_kv(qd)
+    b = ops.lut_dequant_gather(qd)
+    assert a.dtype == b.dtype and a.shape == b.shape
+    assert bool(jnp.all(a == b))
+    # identity on fp views
+    assert ops.lut_dequant_gather(x) is x
+
+
+def test_plan_lut_dequant_matmul_hoists_python_work(monkeypatch):
+    """plan() must match the one-shot wrapper bitwise and resolve scheme
+    inference once, not per call."""
+    w = jax.random.normal(KEY, (128, 256)) * 0.1
+    x = jax.random.normal(jax.random.fold_in(KEY, 81), (8, 128))
+    qw = TQ.quantize(w, scheme="tile")
+    y0 = ops.lut_dequant_matmul(x, qw)
+
+    calls = []
+    orig = TQ.infer_scheme
+    monkeypatch.setattr(ops.TQ, "infer_scheme",
+                        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    run = ops.plan_lut_dequant_matmul(qw, m=8)
+    for _ in range(3):
+        y1 = run(x)
+    assert len(calls) == 1
+    assert bool(jnp.all(y0 == y1))
+
+
+# ---------------------------------------------------------------------------
+# Block-size contracts: ValueErrors instead of silent truncation/asserts
+# ---------------------------------------------------------------------------
+
+
+def test_pick_block_raises_on_impossible_constraint():
+    """_pick_block(n, ...) used to silently return n when n itself
+    violated multiple_of, truncating downstream BlockSpec shapes (e.g. the
+    tile-scheme scales block bn // (group_size // 2))."""
+    with pytest.raises(ValueError, match="multiple of 16"):
+        ops._pick_block(24, 256, multiple_of=16)
+    # legacy behavior everywhere a valid block exists
+    assert ops._pick_block(256, 128) == 128
+    assert ops._pick_block(48, 32, 16) == 16
+    assert ops._pick_block(7, 4) == 7  # prime: falls back to n
+
+
+def test_lut_attention_rejects_indivisible_blocks():
+    q = jnp.zeros((1, 12, 64), jnp.float16)
+    lut = build_exp_lut()
+    from repro.kernels.lut_softmax_attention import lut_softmax_attention
+
+    with pytest.raises(ValueError, match=r"Sq=12 with bq=8"):
+        lut_softmax_attention(q, q, q, lut, bq=8, bkv=4)
+
+
+def test_lut_dequant_gemm_rejects_bad_shapes():
+    from repro.kernels.lut_dequant_gemm import lut_dequant_gemm
+
+    w = jax.random.normal(KEY, (96, 64)) * 0.1
+    qw = TQ.quantize(w, scheme="tile")
+    x = jnp.zeros((4, 100), jnp.float32)
+    with pytest.raises(ValueError, match="96 rows but x has K=100"):
+        lut_dequant_gemm(x, qw["codes"], qw["scales"], qw["codebook"])
+    x = jnp.zeros((4, 96), jnp.float32)
+    with pytest.raises(ValueError, match="must divide the GEMM shape"):
+        lut_dequant_gemm(x, qw["codes"], qw["scales"], qw["codebook"],
+                         bk=36)
+
+
+# ---------------------------------------------------------------------------
+# Autotuner
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_defaults_match_legacy_choices():
+    """With no measured cache, the analytic roofline reproduces the old
+    fixed-target picks — autotuning must not churn kernel behavior."""
+    from repro.kernels import autotune as AT
+
+    AT.reset()
+    assert AT.gemm_blocks(16, 1024, 1024, scheme="tile") == (16, 256, 128)
+    assert AT.gemm_blocks(8, 256, 512, scheme="common") == (8, 256, 128)
+    assert AT.attn_blocks(8, 256, 256, 64) == (128, 128)
+    assert AT.quantize_blocks(512, 1024) == (128, 256)
+    assert AT.dequant_rows(48, 2, 32, "q8") == 48
+
+
+def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
+    """A measured entry recorded by the benchmark overrides the analytic
+    choice; REPRO_AUTOTUNE=0 restores the legacy path."""
+    from repro.kernels import autotune as AT
+
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    AT.reset()
+    key = AT.gemm_key(16, 1024, 1024, "tile", 32)
+    AT.record(key, (16, 64, 32), 12.5)
+    assert AT.gemm_blocks(16, 1024, 1024, scheme="tile") == (16, 64, 32)
+    # survives a fresh load
+    AT.reset()
+    assert AT.gemm_blocks(16, 1024, 1024, scheme="tile") == (16, 64, 32)
+    # kill switch: measured entry ignored, legacy picks
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    AT.reset()
+    assert AT.gemm_blocks(16, 1024, 1024, scheme="tile") == (16, 256, 128)
+    monkeypatch.delenv("REPRO_AUTOTUNE")
+    AT.reset()
