@@ -24,12 +24,17 @@ serving.kv_quant — the paged workload with the KV pool stored as
           KV bytes must drop >= 40% while greedy accuracy on the math
           task stays within one task of the fp run (the §5.1 weight
           story compounded onto the paged KV saving).
+serving.beam — step-level PRM beam search as a scheduler workload vs the
+          direct per-task loop: asserts greedy bit-parity, a leak-free
+          pool after both paths, and batched PRM scoring (one scorer
+          forward per scoring boundary) before reporting tree metrics.
 
 Standalone smoke (CI keeps the paged paths alive):
 
     PYTHONPATH=src python -m benchmarks.serving_scaling --paged --dry
     PYTHONPATH=src python -m benchmarks.serving_scaling --prefix-cache --dry
     PYTHONPATH=src python -m benchmarks.serving_scaling --kv-quant q8 --dry
+    PYTHONPATH=src python -m benchmarks.serving_scaling --beam --dry
 """
 from __future__ import annotations
 
@@ -376,6 +381,74 @@ def kv_quant_serving(mode: str = "q8", n_requests: int = 10,
          f"preemptions={s_q['preemptions']}")
 
 
+def beam_serving(n_tasks: int = 6, dry: bool = False):
+    """serving.beam: step-level PRM beam search served as a scheduler
+    workload (tree requests) vs the direct per-task ``core.beam_search``
+    loop.
+
+    Asserts the tentpole invariants before emitting: greedy scheduler
+    outputs are bit-identical to the direct path, the pool drains to zero
+    blocks after both (the direct path used to leak its tree), and PRM
+    scoring is batched — exactly one scorer forward per scoring boundary /
+    final selection (``n_forwards == prm_batches``), where the direct loop
+    issues the same count per task sequentially."""
+    from repro.core.beam_search import beam_search
+    from repro.core.controller import serve_beam_search
+
+    if dry:
+        tok, cfg, params = _untrained_tiny()
+        n_tasks = 2
+    else:
+        tok, cfg, params = trained_tiny()
+    max_len = 96
+    width, expand, step_tokens, max_steps = 2, 2, 6, 2
+    prompt_len = 16
+    fan = width * expand
+    # dry runs an untrained model whose near-tied logits are sensitive to
+    # batch-shape-dependent GEMM rounding: match the scheduler's decode
+    # batch to the direct path's (one tree at a time) so greedy parity is
+    # exact; the trained run keeps two trees in flight
+    n_slots = fan if dry else 2 * fan
+    eng = DecodeEngine(params, cfg, max_len=max_len, eos_id=tok.eos_id,
+                       pad_id=tok.pad_id, paged=True, block_size=8,
+                       n_blocks=1 + 2 * fan * (max_len // 8))
+    tasks = T.gen_dataset(31, n_tasks, reasoning=True, max_terms=2)
+    rcfg = R.reward_config(tok.vocab_size)
+    prm = R.LearnedScorer(R.init_reward_params(jax.random.key(1), rcfg),
+                          rcfg, tok)
+    sc = SamplerConfig(greedy=True)
+
+    direct = [beam_search(eng, tok, t, width=width, expand=expand,
+                          max_steps=max_steps, step_tokens=step_tokens,
+                          rng=jax.random.key(0), prm=prm, sc=sc,
+                          prompt_len=prompt_len) for t in tasks]
+    assert eng.pool.blocks_in_use == 0, "direct beam path leaked blocks"
+    direct_tokens = sum(r.decode_tokens for r in direct)
+
+    base_forwards = prm.n_forwards
+    row = serve_beam_search(eng, tok, tasks, width=width, expand=expand,
+                            step_tokens=step_tokens, max_steps=max_steps,
+                            rng=jax.random.key(0), prm=prm,
+                            n_slots=n_slots, prompt_len=prompt_len, sc=sc)
+    assert eng.pool.blocks_in_use == 0, "scheduler beam path leaked blocks"
+    s = row["serving"]
+    assert prm.n_forwards - base_forwards == s["prm_batches"], \
+        "PRM scoring is not batched (forwards != scoring boundaries)"
+    for d, sv in zip(direct, row["results"]):
+        assert sv.completions == d.completions and sv.chosen == d.chosen, \
+            "scheduler beam outputs diverged from the direct path"
+    emit("serving.beam", s["wall_s"] * 1e6,
+         f"tasks={n_tasks} width={width} expand={expand} "
+         f"slots={s['n_slots']} occupancy={s['avg_slot_occupancy']:.2f} "
+         f"boundaries={s['beam_boundaries']} "
+         f"expansions={s['beam_expansions']} prunes={s['beam_prunes']} "
+         f"prm_batches={s['prm_batches']} "
+         f"prm_candidates_per_batch={s['prm_candidates_per_batch']:.1f} "
+         f"decode_tokens={s['decode_tokens']} "
+         f"direct_decode_tokens={direct_tokens} "
+         f"accuracy={row['accuracy']:.3f} parity=ok leak=0")
+
+
 def dry_rows():
     """The serving snapshot area (``benchmarks.run --record/--check``):
     the three paged-engine rows in dry mode — untrained tiny model, small
@@ -385,6 +458,7 @@ def dry_rows():
     paged_serving(dry=True)
     prefix_cache_serving(dry=True)
     kv_quant_serving(mode="q8", dry=True)
+    beam_serving(dry=True)
 
 
 def run():
@@ -396,6 +470,7 @@ def run():
     paged_serving()
     prefix_cache_serving()
     kv_quant_serving()
+    beam_serving()
 
 
 if __name__ == "__main__":
@@ -408,6 +483,9 @@ if __name__ == "__main__":
                     help="run only the serving.kv_quant section with this "
                          "KV quantization mode (the row itself compares "
                          "against the fp paged run)")
+    ap.add_argument("--beam", action="store_true",
+                    help="run only the serving.beam section (scheduler-"
+                         "served tree search vs the direct beam loop)")
     ap.add_argument("--dry", action="store_true",
                     help="smoke mode: untrained tiny model, small workload")
     args = ap.parse_args()
@@ -418,5 +496,7 @@ if __name__ == "__main__":
         prefix_cache_serving(dry=args.dry)
     elif args.kv_quant:
         kv_quant_serving(mode=args.kv_quant, dry=args.dry)
+    elif args.beam:
+        beam_serving(dry=args.dry)
     else:
         run()

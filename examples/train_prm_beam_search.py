@@ -1,10 +1,13 @@
 """Train a learned process-reward model (the Skywork-PRM stand-in, paper
-§7.1) on the base model's own samples, then run step-level beam search
+§7.1) on the base model's own samples, then serve step-level beam search
 with it — the paper's second TTS method (Fig. 1 right, Fig. 10 bottom).
 
 Pipeline: train base LM -> sample N completions/task -> label with the
 oracle verifier -> train the reward trunk+head on (sequence, correct)
-pairs -> beam-search with the learned PRM vs logprob PRM.
+pairs -> serve beam search end-to-end through the continuous-batching
+scheduler (every task one tree request in a shared paged slot pool;
+expansion = paged fork, pruning = block release, PRM scoring batched at
+each boundary), learned PRM vs logprob PRM.
 
     PYTHONPATH=src python examples/train_prm_beam_search.py
 """
@@ -14,7 +17,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import reward as R
-from repro.core.beam_search import beam_search
+from repro.core.controller import serve_beam_search
 from repro.data import tasks as T
 from repro.data.dataset import MathDataLoader
 from repro.data.tokenizer import ByteTokenizer
@@ -74,16 +77,25 @@ for step in range(120):
         print(f"    prm step {step}: bce={float(loss):.4f}")
 scorer = R.LearnedScorer(rparams, rcfg, tok)
 
-# --- 3. beam search: learned PRM vs self-certainty PRM ----------------------
-print("[3/3] step-level beam search on held-out tasks:")
+# --- 3. scheduler-served beam search: learned PRM vs self-certainty PRM ----
+print("[3/3] serving step-level beam search on held-out tasks "
+      "(continuous scheduler, paged KV pool):")
 held = T.gen_dataset(77, 10, reasoning=False, max_terms=2)
+width, expand = 2, 2
+paged = DecodeEngine(params, cfg, max_len=96, eos_id=tok.eos_id,
+                     pad_id=tok.pad_id, paged=True, block_size=8,
+                     n_blocks=1 + 2 * width * expand * (96 // 8))
 for name, prm in [("logprob-PRM", R.LogProbScorer()),
                   ("learned-PRM", scorer)]:
-    rng = jax.random.key(9)
-    correct = 0
-    for task in held:
-        rng, k = jax.random.split(rng)
-        r = beam_search(engine, tok, task, width=2, expand=2, max_steps=2,
-                        step_tokens=10, rng=k, prm=prm)
-        correct += int(r.correct)
-    print(f"    {name}: accuracy {correct/len(held):.2f}")
+    row = serve_beam_search(paged, tok, held, width=width, expand=expand,
+                            step_tokens=10, max_steps=2,
+                            rng=jax.random.key(9), prm=prm,
+                            n_slots=2 * width * expand)
+    s = row["serving"]
+    assert paged.pool.blocks_in_use == 0, "beam trees leaked pool blocks"
+    print(f"    {name}: accuracy {row['accuracy']:.2f} "
+          f"boundaries={s['beam_boundaries']} "
+          f"expansions={s['beam_expansions']} prunes={s['beam_prunes']} "
+          f"prm_batches={s['prm_batches']} "
+          f"candidates_per_batch={s['prm_candidates_per_batch']:.1f} "
+          f"occupancy={s['avg_slot_occupancy']:.2f} (pool clean)")

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.best_of_n import TTSResult
+from repro.core.reward import prm_final_scores, prm_step_scores
 from repro.data import tasks as T
 from repro.data.tokenizer import ByteTokenizer
 from repro.serving.engine import DecodeEngine
@@ -28,43 +29,54 @@ def beam_search(engine: DecodeEngine, tok: ByteTokenizer, task: T.MathTask,
                 step_tokens: int = 16, rng, prm,
                 sc: SamplerConfig = SamplerConfig(temperature=0.8),
                 prompt_len: int = 64) -> TTSResult:
-    """width = surviving beams; expand = candidates per beam per step."""
+    """width = surviving beams; expand = candidates per beam per step.
+
+    On a paged engine every pool block the search holds is released on
+    return — normal exit, early answer break, or an exception mid-search
+    (``fork``/``reorder``/``prepare_decode`` are atomic w.r.t. the pool,
+    so the live ``state`` always accounts for every held block)."""
     dot_id = tok.encode(".", bos=False)[0]
     ids, lens = tok.encode_batch([task.prompt], prompt_len)
     state = engine.prefill(jnp.asarray(ids), jnp.asarray(lens))
-    state = engine.fork(state, width)
-    texts = [""] * width
-    total_tokens = 0
+    try:
+        state = engine.fork(state, width)
+        beams = [[] for _ in range(width)]   # generated ids per beam
+        total_tokens = 0
 
-    for step in range(max_steps):
-        # expand each beam
-        state = engine.fork(state, expand)
-        texts = [t for t in texts for _ in range(expand)]
-        state = engine.resume(state)
-        rng, k = jax.random.split(rng)
-        state, out = engine.generate(state, step_tokens, k, sc,
-                                     stop_ids=(engine.eos_id, dot_id))
-        total_tokens += int(np.sum(np.asarray(out) != engine.pad_id))
-        # decode() keeps the '.' stop token (a regular byte) and drops pads
-        texts = [t + tok.decode(row) for t, row in zip(texts, out.tolist())]
-        # PRM-score each candidate prefix
-        if hasattr(prm, "score_steps"):
-            scores = jnp.array(
-                [float(prm.score_steps(task, t)[-1]) for t in texts])
-        else:  # logprob PRM fallback
-            scores = prm.score_states(state.logprob_sum, state.n_gen)
-        keep = jnp.argsort(-scores)[:width]
-        state = engine.reorder(state, keep)
-        texts = [texts[int(i)] for i in keep]
-        if all("A:" in t for t in texts):
-            break
+        for step in range(max_steps):
+            # expand each beam
+            state = engine.fork(state, expand)
+            beams = [list(b) for b in beams for _ in range(expand)]
+            state = engine.resume(state)
+            rng, k = jax.random.split(rng)
+            state, out = engine.generate(state, step_tokens, k, sc,
+                                         stop_ids=(engine.eos_id, dot_id))
+            total_tokens += int(np.sum(np.asarray(out) != engine.pad_id))
+            for b, row in zip(beams, out.tolist()):
+                b.extend(t for t in row if t != engine.pad_id)
+            # decode each candidate's FULL id list (a per-round decode
+            # would split multi-byte UTF-8 sequences at round boundaries
+            # and feed the PRM different texts than the scheduler path);
+            # decode() keeps the '.' stop token (a regular byte)
+            texts = [tok.decode(b) for b in beams]
+            # PRM-score all width*expand candidates in one batched call
+            scores = jnp.asarray(prm_step_scores(
+                prm, task, texts, state.logprob_sum, state.n_gen))
+            keep = jnp.argsort(-scores)[:width]
+            state = engine.reorder(state, keep)
+            beams = [beams[int(i)] for i in keep]
+            texts = [texts[int(i)] for i in keep]
+            if all("A:" in t for t in texts):
+                break
 
-    # final selection: best-scoring finished beam
-    if hasattr(prm, "score_texts"):
-        final_scores = prm.score_texts(task, texts)
-    else:
-        final_scores = prm.score_states(state.logprob_sum, state.n_gen)
-    chosen = int(jnp.argmax(final_scores))
+        # final selection: best-scoring finished beam
+        final_scores = prm_final_scores(prm, task, texts,
+                                        state.logprob_sum, state.n_gen)
+        chosen = int(jnp.argmax(final_scores))
+    finally:
+        if engine.paged:
+            state = engine.release_rows(
+                state, list(range(int(state.done.shape[0]))))
     ans = T.extract_answer(texts[chosen])
     return TTSResult(
         completions=texts,

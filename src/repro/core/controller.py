@@ -5,10 +5,21 @@ Two serving paths:
 
 * the direct path (``run_method``) builds one decode batch per task —
   prefill, fork, generate-to-completion; fine for offline evaluation;
-* the continuous path (``serve_best_of_n`` / ``sweep(continuous=True)``)
-  routes every task through one :class:`ContinuousScheduler` slot pool, so
-  all tasks' samples share the decode batch and slots refill mid-flight —
-  the production serving shape, with occupancy/requests-per-second metrics.
+* the continuous path (``serve_best_of_n`` / ``serve_beam_search`` /
+  ``sweep(continuous=True)``) routes every task through one
+  :class:`ContinuousScheduler` slot pool, so all tasks' samples (or beam
+  lanes) share the decode batch and slots refill mid-flight — the
+  production serving shape, with occupancy/requests-per-second metrics.
+
+Serving rows carry ``SchedulerMetrics.summary()`` under ``"serving"``.
+Beyond the occupancy/prefill/preemption keys, the beam-search workload
+adds: ``beam_boundaries`` (prune+expand commits), ``beam_expansions`` /
+``beam_prunes`` (lanes forked / released at those commits — ``fan -
+width`` each), and ``prm_batches`` / ``prm_candidates`` /
+``prm_candidates_per_batch`` (batched score-callback calls and the
+candidates they covered; per-batch > 1 means PRM scoring batched with the
+tree's fan instead of the per-candidate B=1 loop the direct path used to
+run).
 """
 from __future__ import annotations
 
@@ -17,12 +28,14 @@ from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import beam_search as BS
 from repro.core import best_of_n as BoN
+from repro.core import reward as R
 from repro.core import self_consistency as SC
 from repro.data import tasks as T
-from repro.serving.engine import ContinuousScheduler, Request
+from repro.serving.engine import BeamSpec, ContinuousScheduler, Request
 from repro.serving.sampler import SamplerConfig
 
 
@@ -33,6 +46,8 @@ class TTSSpec:
     max_tokens: int = 48
     beam_width: int = 0    # beam search only
     beam_expand: int = 0
+    beam_steps: int = 8    # scoring boundaries (beam search only)
+    step_tokens: int = 16  # token budget per reasoning step
 
 
 def run_method(engine, tok, task, spec: TTSSpec, rng, scorer):
@@ -47,8 +62,41 @@ def run_method(engine, tok, task, spec: TTSSpec, rng, scorer):
         width = spec.beam_width or max(1, spec.budget // 2)
         expand = spec.beam_expand or 2
         return BS.beam_search(engine, tok, task, width=width, expand=expand,
+                              max_steps=spec.beam_steps,
+                              step_tokens=spec.step_tokens,
                               rng=rng, prm=scorer)
     raise ValueError(spec.method)
+
+
+def _attach_serving_stats(serving: dict, engine, n_slots: int, cow_base: int,
+                          prefix_cache, cache_base) -> None:
+    """Attach paged-KV / prefix-cache interval stats to a serving row.
+
+    paged-KV accounting: hbm_saved_bytes = dense reservation minus the
+    *logical* peak block usage, i.e. what a pool right-sized to this
+    workload saves (this run's pool itself physically backs
+    pool_reserved_bytes regardless of use).  peak_bytes_in_use is
+    dtype-aware (block_bytes measures the device leaves), so a quantized
+    pool (stats()["kv_quant"] of "q8"/"q4") reports its compounded paged ×
+    quantization saving against the fp dense baseline here."""
+    if engine.paged:
+        from repro.serving.kv_pool import dense_kv_bytes
+
+        serving["kv"] = engine.pool.stats()
+        serving["kv"]["cow_copies"] -= cow_base
+        serving["kv"]["dense_bytes"] = dense_kv_bytes(
+            engine.cfg, n_slots, engine.max_len)
+        serving["kv"]["hbm_saved_bytes"] = (
+            serving["kv"]["dense_bytes"] - serving["kv"]["peak_bytes_in_use"])
+    if prefix_cache is not None:
+        # cache counters are lifetime values on a sweep-shared cache:
+        # report this row's interval (cached_blocks/bytes stay gauges)
+        pc = prefix_cache.stats()
+        for key in ("lookups", "hits", "tokens_matched", "insertions",
+                    "evictions"):
+            pc[key] -= cache_base[key]
+        pc["hit_rate"] = pc["hits"] / pc["lookups"] if pc["lookups"] else 0.0
+        serving["prefix_cache"] = pc
 
 
 def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
@@ -90,32 +138,8 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
                              max_new_tokens=max_tokens, n_samples=n))
     sched.run(rng, sc)
     serving = sched.metrics.summary()
-    if engine.paged:
-        # paged-KV accounting: hbm_saved_bytes = dense reservation minus
-        # the *logical* peak block usage, i.e. what a pool right-sized to
-        # this workload saves (this run's pool itself physically backs
-        # pool_reserved_bytes regardless of use).  peak_bytes_in_use is
-        # dtype-aware (block_bytes measures the device leaves), so a
-        # quantized pool (stats()["kv_quant"] of "q8"/"q4") reports its
-        # compounded paged × quantization saving against the fp dense
-        # baseline here.
-        from repro.serving.kv_pool import dense_kv_bytes
-
-        serving["kv"] = engine.pool.stats()
-        serving["kv"]["cow_copies"] -= cow_base
-        serving["kv"]["dense_bytes"] = dense_kv_bytes(
-            engine.cfg, n_slots, engine.max_len)
-        serving["kv"]["hbm_saved_bytes"] = (
-            serving["kv"]["dense_bytes"] - serving["kv"]["peak_bytes_in_use"])
-    if prefix_cache is not None:
-        # cache counters are lifetime values on a sweep-shared cache:
-        # report this row's interval (cached_blocks/bytes stay gauges)
-        pc = prefix_cache.stats()
-        for key in ("lookups", "hits", "tokens_matched", "insertions",
-                    "evictions"):
-            pc[key] -= cache_base[key]
-        pc["hit_rate"] = pc["hits"] / pc["lookups"] if pc["lookups"] else 0.0
-        serving["prefix_cache"] = pc
+    _attach_serving_stats(serving, engine, n_slots, cow_base,
+                          prefix_cache, cache_base)
     correct = cost = 0
     for i, task in enumerate(tasks):
         samples = sorted(sched.completed[i], key=lambda s: s.sample_idx)
@@ -137,16 +161,112 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
     }
 
 
+def _beam_callbacks(tok, task: T.MathTask, prm):
+    """Tokenizer/PRM closures for a :class:`BeamSpec` — the scheduler sees
+    token lists only; texts and scorer dispatch live here.  The dispatch
+    order matches the direct path (``prm_step_scores`` /
+    ``prm_final_scores``), so direct-vs-scheduler scores are identical."""
+
+    def step_score(token_lists, logprob_sum, n_gen):
+        texts = [tok.decode(t) for t in token_lists]
+        return np.asarray(R.prm_step_scores(
+            prm, task, texts, jnp.asarray(logprob_sum),
+            jnp.asarray(n_gen)))
+
+    def final_score(token_lists, logprob_sum, n_gen):
+        texts = [tok.decode(t) for t in token_lists]
+        return np.asarray(R.prm_final_scores(
+            prm, task, texts, jnp.asarray(logprob_sum),
+            jnp.asarray(n_gen)))
+
+    def finished(token_lists):
+        return all("A:" in tok.decode(t) for t in token_lists)
+
+    return step_score, final_score, finished
+
+
+def serve_beam_search(engine, tok, tasks: Sequence[T.MathTask], *,
+                      width: int, expand: int, step_tokens: int = 16,
+                      max_steps: int = 8, rng, prm, n_slots: int = 8,
+                      prompt_len: Optional[int] = None,
+                      sc: SamplerConfig = SamplerConfig(temperature=0.8),
+                      prefix_cache=None):
+    """Step-level PRM beam search over a task set through the
+    continuous-batching scheduler (the production counterpart of the
+    direct ``core.beam_search`` path).
+
+    Every task is one tree request (``search=BeamSpec(width, expand,
+    ...)``): one prefill forked into ``width * expand`` lanes that decode
+    inside the shared slot pool — beam expansion is a paged ``fork``
+    (refcount bump), pruning a block release, and PRM scoring runs one
+    batched callback per scoring boundary, so generator steps and scorer
+    calls interleave in the same step loop across *all* in-flight trees
+    and any chat/BoN traffic sharing the scheduler.  Returns the sweep
+    row shape plus ``"results"`` (one :class:`TTSResult` per task, with
+    the scheduler's completions/chosen — greedy decoding makes these
+    bit-identical to the direct path) and the scheduler metrics under
+    ``"serving"``, including the ``beam_*`` / ``prm_*`` keys documented
+    in the module docstring."""
+    prompts = [jnp.asarray(tok.encode(task.prompt)) for task in tasks]
+    if prompt_len is None:
+        prompt_len = max((int(p.shape[0]) for p in prompts), default=1)
+    fan = width * expand
+    n_slots = max(n_slots, fan)
+    sched = ContinuousScheduler(engine, n_slots=n_slots,
+                                prompt_len=prompt_len,
+                                prefix_cache=prefix_cache)
+    cow_base = engine.pool.reset_peak() if engine.paged else 0
+    cache_base = prefix_cache.stats() if prefix_cache is not None else None
+    dot_id = int(tok.encode(".", bos=False)[0])
+    for i, task in enumerate(tasks):
+        step_score, final_score, finished = _beam_callbacks(tok, task, prm)
+        sched.submit(Request(
+            req_id=i, prompt=prompts[i],
+            search=BeamSpec(width=width, expand=expand,
+                            step_tokens=step_tokens, max_steps=max_steps,
+                            step_stop_id=dot_id, score=step_score,
+                            final_score=final_score, finished=finished)))
+    sched.run(rng, sc)
+    serving = sched.metrics.summary()
+    _attach_serving_stats(serving, engine, n_slots, cow_base,
+                          prefix_cache, cache_base)
+    correct = 0
+    results = []
+    for i, task in enumerate(tasks):
+        samples = sorted(sched.completed[i], key=lambda s: s.sample_idx)
+        completions = [tok.decode(s.tokens) for s in samples]
+        res = sched.beam_results[i]
+        chosen = res["chosen"]
+        ans = T.extract_answer(completions[chosen])
+        ok = (ans == task.answer) if ans is not None else False
+        correct += int(ok)
+        results.append(BoN.TTSResult(
+            completions=completions,
+            scores=jnp.asarray(res["scores"], jnp.float32),
+            chosen=chosen, answer=ans, correct=ok,
+            decode_tokens=sum(s.n_gen for s in samples)))
+    return {
+        "method": "beam_search",
+        "budget": fan,
+        "accuracy": correct / max(1, len(tasks)),
+        # serving cost: every decode step a lane occupies a slot (the
+        # pruned lanes' tokens included), not just the survivors' tokens
+        "decode_tokens": serving["decode_tokens"],
+        "serving": serving,
+        "results": results,
+    }
+
+
 def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
           rng, scorer, *, continuous: bool = False, n_slots: int = 8,
           prefix_cache=None):
     """Accuracy / decode-cost for each spec — one row per Pareto point.
 
-    ``continuous=True`` runs Best-of-N specs through the slot-based
-    scheduler (shared decode batch across tasks); other methods fall back
-    to the direct per-task path.  ``prefix_cache`` (continuous Best-of-N
-    only) is shared across every row, so common prompt prefixes persist
-    across the whole sweep, not just within one row.
+    ``continuous=True`` runs Best-of-N and beam-search specs through the
+    slot-based scheduler (shared decode batch across tasks); other
+    methods fall back to the direct per-task path.  ``prefix_cache``
+    (continuous rows only) is shared across every row, so common prompt
+    prefixes persist across the whole sweep, not just within one row.
     """
     rows = []
     for spec in specs:
@@ -156,6 +276,16 @@ def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
                 engine, tok, tasks, n=spec.budget,
                 max_tokens=spec.max_tokens, rng=k, scorer=scorer,
                 n_slots=max(n_slots, spec.budget),
+                prefix_cache=prefix_cache))
+            continue
+        if continuous and spec.method == "beam_search":
+            rng, k = jax.random.split(rng)
+            width = spec.beam_width or max(1, spec.budget // 2)
+            expand = spec.beam_expand or 2
+            rows.append(serve_beam_search(
+                engine, tok, tasks, width=width, expand=expand,
+                step_tokens=spec.step_tokens, max_steps=spec.beam_steps,
+                rng=k, prm=scorer, n_slots=max(n_slots, width * expand),
                 prefix_cache=prefix_cache))
             continue
         correct = cost = 0

@@ -95,7 +95,11 @@ def reward_loss(params, tokens, lengths, labels, cfg: ModelConfig):
 
 
 class LearnedScorer:
-    """Trained ORM/PRM wrapper operating on text (tokenizes internally)."""
+    """Trained ORM/PRM wrapper operating on text (tokenizes internally).
+
+    ``n_forwards`` counts reward-model forward passes (one per ``_apply``
+    call) — the serving stack asserts PRM scoring stays *batched* (one
+    forward per beam boundary, not one per candidate) against it."""
 
     def __init__(self, params, cfg: ModelConfig, tok: ByteTokenizer,
                  max_len: int = 256):
@@ -103,13 +107,26 @@ class LearnedScorer:
         self.cfg = cfg
         self.tok = tok
         self.max_len = max_len
+        self.n_forwards = 0
         self._apply = jax.jit(partial(reward_apply, cfg=cfg))
 
-    def score_texts(self, task: T.MathTask, completions: Sequence[str]):
-        texts = [task.prompt + c for c in completions]
-        ids, lens = self.tok.encode_batch(texts, self.max_len)
+    def _score_prefixes(self, prefixes: Sequence[str]):
+        ids, lens = self.tok.encode_batch(list(prefixes), self.max_len)
+        self.n_forwards += 1
         return jax.nn.sigmoid(self._apply(self.params, jnp.asarray(ids),
                                           jnp.asarray(lens)))
+
+    def score_texts(self, task: T.MathTask, completions: Sequence[str]):
+        return self._score_prefixes([task.prompt + c for c in completions])
+
+    @staticmethod
+    def _last_step_prefix(task: T.MathTask, completion: str) -> str:
+        """The prefix ``score_steps(task, completion)[-1]`` scores: the
+        prompt plus every (delimiter-normalized) step of the completion."""
+        steps = T.split_steps(completion)
+        if not steps:
+            return task.prompt + completion
+        return task.prompt + "".join(steps)
 
     def score_steps(self, task: T.MathTask, completion: str):
         """PRM mode: score every step prefix of a completion."""
@@ -120,6 +137,45 @@ class LearnedScorer:
             prefixes.append(task.prompt + acc)
         if not prefixes:
             prefixes = [task.prompt + completion]
-        ids, lens = self.tok.encode_batch(prefixes, self.max_len)
-        return jax.nn.sigmoid(self._apply(self.params, jnp.asarray(ids),
-                                          jnp.asarray(lens)))
+        return self._score_prefixes(prefixes)
+
+    def score_step_batch(self, task: T.MathTask,
+                         completions: Sequence[str]):
+        """PRM mode, batched across candidates: the last-step score of
+        every completion (``score_steps(task, c)[-1]`` for each ``c``) in
+        ONE reward forward.  This is what beam search calls at a scoring
+        boundary — width × expand candidates ride one batch instead of
+        the per-candidate B=1 loop."""
+        return self._score_prefixes(
+            [self._last_step_prefix(task, c) for c in completions])
+
+
+# ---------------------------------------------------------------------------
+# Scorer dispatch (shared by direct beam search and the scheduler path)
+# ---------------------------------------------------------------------------
+
+
+def prm_step_scores(prm, task: T.MathTask, completions: Sequence[str],
+                    logprob_sum=None, n_gen=None):
+    """Score candidate step-prefixes with whatever the scorer supports:
+    batched PRM (``score_step_batch``) > per-candidate PRM
+    (``score_steps``) > outcome scorer (``score_texts``, e.g.
+    :class:`OracleVerifier`) > state-based fallback (``score_states``,
+    needs ``logprob_sum``/``n_gen``).  Returns (n,) scores."""
+    if hasattr(prm, "score_step_batch"):
+        return prm.score_step_batch(task, completions)
+    if hasattr(prm, "score_steps"):
+        return jnp.array(
+            [float(prm.score_steps(task, c)[-1]) for c in completions])
+    if hasattr(prm, "score_texts"):
+        return prm.score_texts(task, completions)
+    return prm.score_states(logprob_sum, n_gen)
+
+
+def prm_final_scores(prm, task: T.MathTask, completions: Sequence[str],
+                     logprob_sum=None, n_gen=None):
+    """Final-selection scores over surviving beams: full-sequence ORM view
+    (``score_texts``) when available, else the state-based fallback."""
+    if hasattr(prm, "score_texts"):
+        return prm.score_texts(task, completions)
+    return prm.score_states(logprob_sum, n_gen)

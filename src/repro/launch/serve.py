@@ -69,7 +69,27 @@ def main():
                     help="prepend a shared header of N worked examples to "
                          "every task prompt (the cross-request common "
                          "prefix the cache exploits)")
+    ap.add_argument("--beam-width", type=int, default=0,
+                    help="surviving beams for --method beam_search "
+                         "(0 = budget // 2)")
+    ap.add_argument("--beam-expand", type=int, default=2,
+                    help="candidates per surviving beam per step")
+    ap.add_argument("--beam-steps", type=int, default=8,
+                    help="reasoning-step scoring boundaries before final "
+                         "selection")
+    ap.add_argument("--step-tokens", type=int, default=16,
+                    help="token budget per reasoning step")
+    ap.add_argument("--dry", action="store_true",
+                    help="CI smoke: shrink tasks/budget/steps so the run "
+                         "finishes in seconds while still exercising the "
+                         "full serving path")
     args = ap.parse_args()
+    if args.dry:
+        args.tasks = min(args.tasks, 2)
+        args.budget = min(args.budget, 4)
+        args.max_tokens = min(args.max_tokens, 12)
+        args.beam_steps = min(args.beam_steps, 2)
+        args.step_tokens = min(args.step_tokens, 8)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     tok = ByteTokenizer()
@@ -91,13 +111,10 @@ def main():
         params = quantize_model_params(params)
         print("[serve] weights quantized: tile-group Q4_0 + Q8_0 down-proj")
 
-    if args.continuous and args.method != "best_of_n":
-        print(f"[serve] WARNING: --continuous only routes best_of_n through "
-              f"the slot scheduler; {args.method} uses the direct path")
-    if args.paged and args.method == "beam_search":
-        print("[serve] WARNING: --paged with beam_search leaks pool blocks "
-              "across tasks (beam states are not auto-released); prefer "
-              "best_of_n or self_consistency")
+    if args.continuous and args.method == "self_consistency":
+        print(f"[serve] WARNING: --continuous routes best_of_n and "
+              f"beam_search through the slot scheduler; {args.method} "
+              f"uses the direct path")
 
     max_len = 256
     kv_kwargs = {}
@@ -107,11 +124,14 @@ def main():
     if args.paged:
         if max_len % args.block_size:
             raise SystemExit(f"--block-size must divide max_len={max_len}")
-        # auto-size for the wider of the slot pool and the TTS fan-out:
-        # the direct (non-continuous) path forks `budget` rows at once and
-        # has no preemption to fall back on, and sweep() itself grows the
-        # scheduler to max(slots, budget) slots
-        rows = max(args.slots, args.budget)
+        # auto-size for the widest of the slot pool, the TTS fan-out and
+        # the beam fan-out: the direct (non-continuous) path forks
+        # `budget` (or width*expand) rows at once and has no preemption
+        # to fall back on, and sweep() itself grows the scheduler to
+        # max(slots, fan) slots
+        fan = ((args.beam_width or max(1, args.budget // 2))
+               * args.beam_expand if args.method == "beam_search" else 0)
+        rows = max(args.slots, args.budget, fan)
         n_blocks = args.kv_blocks or (
             1 + rows * (max_len // args.block_size))
         kv_kwargs = dict(paged=True, block_size=args.block_size,
@@ -135,10 +155,25 @@ def main():
         tasks = T.gen_dataset(123, args.tasks)
     scorer = R.OracleVerifier()
     spec = TTSSpec(method=args.method, budget=args.budget,
-                   max_tokens=args.max_tokens)
+                   max_tokens=args.max_tokens, beam_width=args.beam_width,
+                   beam_expand=args.beam_expand, beam_steps=args.beam_steps,
+                   step_tokens=args.step_tokens)
     rows = sweep(engine, tok, tasks, [spec], jax.random.key(0), scorer,
                  continuous=args.continuous, n_slots=args.slots,
                  prefix_cache=prefix_cache)
+    if args.paged:
+        # leak check: after a full drain the pool holds only the prefix
+        # cache's pins — beam trees included (the pre-scheduler beam path
+        # used to leak every task's blocks here)
+        pinned = (prefix_cache.stats()["cached_blocks"]
+                  if prefix_cache is not None else 0)
+        in_use = engine.pool.blocks_in_use
+        if in_use != pinned:
+            raise SystemExit(
+                f"[serve] KV pool leak: {in_use} blocks still in use after "
+                f"drain (expected {pinned} cache-pinned)")
+        print(f"[serve] kv pool clean: {in_use} blocks in use after drain "
+              f"({pinned} cache-pinned)")
     for r in rows:
         print(f"[serve] {r['method']} budget={r['budget']} "
               f"accuracy={r['accuracy']:.3f} "
@@ -154,6 +189,13 @@ def main():
                   f"calls_per_request={s['prefill_calls_per_request']:.2f} "
                   f"admission_batch_max={s['admission_batch_max']} "
                   f"preemptions={s['preemptions']}")
+            if s.get("beam_boundaries"):
+                print(f"[serve] beam: boundaries={s['beam_boundaries']} "
+                      f"expansions={s['beam_expansions']} "
+                      f"prunes={s['beam_prunes']} "
+                      f"prm_batches={s['prm_batches']} "
+                      f"prm_candidates_per_batch="
+                      f"{s['prm_candidates_per_batch']:.1f}")
             if "prefix_cache" in s:
                 pc = s["prefix_cache"]
                 print(f"[serve] prefix cache: hit_rate={pc['hit_rate']:.2f} "

@@ -643,7 +643,7 @@ class DecodeEngine:
 
     # -- decode -------------------------------------------------------------
     def _step_core(self, params, state: GenState, cache_in, rng,
-                   sc: SamplerConfig, stop_ids: tuple):
+                   sc: SamplerConfig, stop_ids: tuple, row_stops=None):
         stop_ids = tuple(stop_ids) or (self.eos_id,)
         tok = sample(state.pending_logits, rng, sc)
         lp = logprobs_of(state.pending_logits, tok)
@@ -651,6 +651,10 @@ class DecodeEngine:
         new_done = state.done
         for s in stop_ids:
             new_done = new_done | (tok == s)
+        if row_stops is not None:
+            # per-row extra stop id (-1 = none): beam rows stop at their
+            # step delimiter while chat rows in the same batch do not
+            new_done = new_done | (tok == row_stops)
         new_len = jnp.where(state.done, state.cache_len, state.cache_len + 1)
         # Done rows must not clobber their last real KV slot: route their
         # (discarded) write to the reserved scratch slot max_len-1.  Usable
@@ -680,24 +684,30 @@ class DecodeEngine:
         )
         return new_state, tok, cache
 
-    def _step_impl(self, params, state: GenState, rng, *, sc: SamplerConfig,
-                   stop_ids: tuple = ()):
+    def _step_impl(self, params, state: GenState, rng, row_stops=None, *,
+                   sc: SamplerConfig, stop_ids: tuple = ()):
         st, tok, cache = self._step_core(params, state, state.cache, rng,
-                                         sc, stop_ids)
+                                         sc, stop_ids, row_stops)
         return dataclasses.replace(st, cache=cache), tok
 
     def _step_paged_impl(self, params, state: GenState, pool_k, pool_v, rng,
-                         *, sc: SamplerConfig, stop_ids: tuple = ()):
+                         row_stops=None, *, sc: SamplerConfig,
+                         stop_ids: tuple = ()):
         cache_in = {"k": pool_k, "v": pool_v,
                     "table": state.cache["table"]}
         st, tok, cache = self._step_core(params, state, cache_in, rng,
-                                         sc, stop_ids)
+                                         sc, stop_ids, row_stops)
         st = dataclasses.replace(st, cache=state.cache)
         return st, tok, cache["k"], cache["v"]
 
     def step(self, state: GenState, rng, sc: SamplerConfig = SamplerConfig(),
-             stop_ids: tuple = ()):
+             stop_ids: tuple = (), row_stops=None):
         """One decode step. Returns (new_state, sampled tokens (B,)).
+
+        ``row_stops`` (B,) int32 adds one *per-row* stop id on top of the
+        shared ``stop_ids`` (-1 disables a row) — the scheduler uses it to
+        stop beam-search rows at their step delimiter while plain chat
+        rows in the same batch decode through it.
 
         Paged: runs :meth:`prepare_decode` first (may raise
         :class:`OutOfBlocks`), then scatters this step's KV into pool
@@ -705,11 +715,11 @@ class DecodeEngine:
         if self.paged:
             state = self.prepare_decode(state)
             st, tok, pk, pv = self._step_paged_jit(
-                self.params, state, self.pool.k, self.pool.v, rng, sc=sc,
-                stop_ids=tuple(stop_ids))
+                self.params, state, self.pool.k, self.pool.v, rng,
+                row_stops, sc=sc, stop_ids=tuple(stop_ids))
             self.pool.adopt(pk, pv)
             return st, tok
-        return self._step_jit(self.params, state, rng, sc=sc,
+        return self._step_jit(self.params, state, rng, row_stops, sc=sc,
                               stop_ids=tuple(stop_ids))
 
     def _generate_impl(self, params, state: GenState, rng, *, n_steps: int,
@@ -764,10 +774,69 @@ class DecodeEngine:
             done=jnp.zeros_like(state.done),
             logprob_sum=state.logprob_sum, n_gen=state.n_gen)
 
+    def freeze_rows(self, state: GenState, rows) -> GenState:
+        """Mark ``rows`` done *without* freeing paged blocks: the rows stop
+        advancing (writes routed to scratch, pending logits frozen) but
+        keep their KV.  The scheduler freezes beam rows that exhaust a
+        reasoning step's token budget until the whole tree reaches its
+        scoring boundary; :meth:`resume_rows` re-arms them."""
+        rows = jnp.asarray(np.asarray(rows, np.int64).ravel(), jnp.int32)
+        return dataclasses.replace(state, done=state.done.at[rows].set(True))
+
+    def resume_rows(self, state: GenState, rows) -> GenState:
+        """Clear done flags for ``rows`` only (the per-row counterpart of
+        :meth:`resume` — other rows, e.g. idle scheduler slots, keep their
+        done state)."""
+        rows = jnp.asarray(np.asarray(rows, np.int64).ravel(), jnp.int32)
+        return dataclasses.replace(state,
+                                   done=state.done.at[rows].set(False))
+
 
 # ---------------------------------------------------------------------------
 # Continuous batching scheduler (slot-based)
 # ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BeamSpec:
+    """Step-level tree search as a scheduler request class (paper §2.1).
+
+    A request carrying a ``BeamSpec`` occupies ``width * expand`` slots
+    ("lanes") and decodes like any other row of the continuous batch.  A
+    lane stops at ``step_stop_id`` (the reasoning-step delimiter) or after
+    ``step_tokens`` tokens; once every lane has stopped the tree hits a
+    *scoring boundary*: ``score`` ranks all ``width * expand`` candidate
+    prefixes in ONE batched call, the top ``width`` survive, and one
+    ``DecodeEngine.reorder`` commits the prune + re-expansion — on a paged
+    pool, losing lanes' blocks free (refcount to zero) and each survivor's
+    blocks gain ``expand - 1`` references (zero KV bytes copied).  After
+    ``max_steps`` boundaries (or ``finished`` returning True on the
+    survivors) ``final_score`` picks the answer and the request completes
+    with ``width`` samples.
+
+    The callbacks keep the scheduler tokenizer-agnostic; the controller
+    builds them (decode token lists -> texts -> PRM):
+
+    * ``score(token_lists, logprob_sum, n_gen) -> (n,) scores`` — batched
+      candidate scoring at each boundary (required);
+    * ``final_score`` — final-beam selection (defaults to ``score``);
+    * ``finished(token_lists) -> bool`` — early-exit check on the
+      survivors (e.g. every beam contains a final answer).
+    """
+
+    width: int                   # surviving beams per boundary
+    expand: int                  # candidates per surviving beam
+    step_tokens: int = 16        # token budget per reasoning step
+    max_steps: int = 8           # scoring boundaries before final selection
+    step_stop_id: int = -1       # step delimiter token id (e.g. '.')
+    score: Optional[Callable] = None
+    final_score: Optional[Callable] = None
+    finished: Optional[Callable] = None
+
+    @property
+    def fan(self) -> int:
+        """Slots (lanes) the request occupies while decoding."""
+        return self.width * self.expand
 
 
 @dataclass
@@ -776,6 +845,7 @@ class Request:
     prompt: jnp.ndarray          # (S,) int32
     max_new_tokens: int = 64
     n_samples: int = 1           # >1: TTS fan-out sharing one prefill (fork)
+    search: Optional[BeamSpec] = None  # beam-search tree request class
 
 
 @dataclass
@@ -803,6 +873,26 @@ class _Slot:
     admitted_step: int
     tokens: list = field(default_factory=list)
     first_decode_step: int = -1
+
+
+@dataclass
+class _BeamRun:
+    """Host-side bookkeeping for one in-flight beam-search request.
+
+    ``rows`` are the ``fan`` slot indices the tree occupies (fixed for the
+    request's lifetime — boundary reorders move KV *between* these rows,
+    never out of them).  Lane ``j`` accumulates its candidate prefix in
+    ``tokens[j]`` (step-delimiter stops included, like the direct path's
+    decode of the generate output); ``step_gen``/``stopped`` track each
+    lane's progress toward the current scoring boundary."""
+
+    req: Request
+    spec: BeamSpec
+    rows: list
+    tokens: list                 # per-lane generated ids since admission
+    step_gen: list               # per-lane tokens sampled this beam step
+    stopped: list                # per-lane: reached delimiter/budget
+    beam_step: int = 0           # boundaries completed
 
 
 @dataclass
@@ -841,6 +931,17 @@ class SchedulerMetrics:
         # serving benchmark asserts (it was pinned at 1 for cache-aware
         # admission before batched partial prefill).
         self.admission_batch_sizes: list[int] = []
+        # beam-search (tree) workload counters: a boundary is one
+        # prune+expand commit; expansions/prunes count lanes forked /
+        # released there (fan - width each); prm_batches counts batched
+        # score-callback calls and prm_candidates the candidates they
+        # covered — candidates_per_batch > 1 is the batched-scoring win
+        # (the pre-scheduler path scored per-candidate at batch 1)
+        self.beam_boundaries = 0
+        self.beam_expansions = 0
+        self.beam_prunes = 0
+        self.prm_batches = 0
+        self.prm_candidates = 0
 
     def record(self, rec: StepRecord):
         self.records.append(rec)
@@ -889,6 +990,14 @@ class SchedulerMetrics:
             "prefill_tokens_saved": self.prefill_tokens_saved,
             "peak_kv_bytes": self.peak_kv_bytes,
             "kv_quant": self.kv_quant,
+            "beam_boundaries": self.beam_boundaries,
+            "beam_expansions": self.beam_expansions,
+            "beam_prunes": self.beam_prunes,
+            "prm_batches": self.prm_batches,
+            "prm_candidates": self.prm_candidates,
+            "prm_candidates_per_batch": (self.prm_candidates
+                                         / self.prm_batches
+                                         if self.prm_batches else 0.0),
         }
 
 
@@ -958,6 +1067,22 @@ class ContinuousScheduler:
     parity baseline); ``SchedulerMetrics.admission_batch_sizes`` records
     the per-call request counts, driving the benchmark's
     ``prefill_calls_per_request < 1`` assertion.
+
+    **Tree search** is a first-class request class: a request carrying
+    ``search=``:class:`BeamSpec` admits through the same (cache-aware)
+    path — one prefill, ``fork`` into ``width * expand`` lanes — and its
+    lanes decode inside the shared batch alongside chat/BoN traffic,
+    stopping per-row at the spec's step delimiter via ``row_stops``.
+    When every lane has stopped, the tree hits a scoring boundary: the
+    spec's ``score`` callback ranks all candidates in one batched call
+    (PRM forwards batch with the tree's fan instead of the pre-scheduler
+    per-candidate B=1 loop) and one ``engine.reorder`` commits the
+    prune+expansion (block frees + refcount bumps on the paged pool).
+    Finished trees emit ``width`` samples plus a ``beam_results`` entry
+    and free every lane's blocks; ``OutOfBlocks`` preemption treats a
+    tree like any group (all lanes released, the search restarts on
+    re-admission).  Boundary/expansion/prune and PRM batching counters
+    land in ``SchedulerMetrics``.
     """
 
     def __init__(self, engine: DecodeEngine, n_slots: int = 8,
@@ -989,6 +1114,8 @@ class ContinuousScheduler:
         self.n_prefills = 0
         self.completed: dict[int, list[CompletedSample]] = {}
         self._n_samples: dict[int, int] = {}
+        self._beams: dict[int, _BeamRun] = {}   # req_id -> in-flight tree
+        self.beam_results: dict[int, dict] = {}  # req_id -> final selection
         self.metrics = SchedulerMetrics(n_slots)
         if self.paged:
             # bytes, not blocks-equivalent: quantized pools have smaller
@@ -1002,7 +1129,30 @@ class ContinuousScheduler:
             raise ValueError(
                 f"request id {req.req_id} already submitted to this "
                 f"scheduler (results are keyed by req_id)")
-        if req.max_new_tokens < 1:
+        if req.search is not None:
+            spec = req.search
+            if req.n_samples != 1:
+                raise ValueError(
+                    f"request {req.req_id}: search and n_samples > 1 are "
+                    f"mutually exclusive (the tree owns its fan-out)")
+            if min(spec.width, spec.expand, spec.step_tokens,
+                   spec.max_steps) < 1:
+                raise ValueError(
+                    f"request {req.req_id}: BeamSpec width/expand/"
+                    f"step_tokens/max_steps must all be >= 1")
+            if spec.score is None:
+                raise ValueError(
+                    f"request {req.req_id}: BeamSpec.score is required "
+                    f"(batched candidate scoring callback)")
+            if spec.step_stop_id < 0:
+                raise ValueError(
+                    f"request {req.req_id}: BeamSpec.step_stop_id must be "
+                    f"a valid token id (the reasoning-step delimiter)")
+            if spec.fan > self.n_slots:
+                raise ValueError(
+                    f"request {req.req_id}: beam fan-out width*expand="
+                    f"{spec.fan} exceeds n_slots={self.n_slots}")
+        elif req.max_new_tokens < 1:
             raise ValueError(
                 f"request {req.req_id}: max_new_tokens must be >= 1, got "
                 f"{req.max_new_tokens}")
@@ -1016,12 +1166,12 @@ class ContinuousScheduler:
                 f"exceeds prompt_len={self.prompt_len}")
         # usable sequence length is max_len - 1 (the engine reserves the
         # last slot as the done-row KV scratch position)
-        budget = int(req.prompt.shape[0]) + req.max_new_tokens
+        budget = int(req.prompt.shape[0]) + self._max_new(req)
         if budget > self.engine.max_len - 1:
             raise ValueError(
                 f"request {req.req_id}: prompt ({req.prompt.shape[0]}) + "
-                f"max_new_tokens ({req.max_new_tokens}) = {budget} exceeds "
-                f"engine max_len - 1 = {self.engine.max_len - 1}")
+                f"worst-case new tokens ({self._max_new(req)}) = {budget} "
+                f"exceeds engine max_len - 1 = {self.engine.max_len - 1}")
         if self.paged:
             worst = self._worst_case_blocks(req)
             if worst > self.engine.pool.capacity:
@@ -1030,17 +1180,31 @@ class ContinuousScheduler:
                     f"({worst} blocks) exceeds pool capacity "
                     f"({self.engine.pool.capacity} blocks) — the request "
                     f"could never run even alone")
-        self._n_samples[req.req_id] = max(1, req.n_samples)
+        self._n_samples[req.req_id] = (req.search.width if req.search
+                                       else max(1, req.n_samples))
         self.queue.append(req)
+
+    @staticmethod
+    def _fan(req: Request) -> int:
+        """Slots the request occupies: beam fan-out, TTS samples, or 1."""
+        return req.search.fan if req.search is not None \
+            else max(1, req.n_samples)
+
+    @staticmethod
+    def _max_new(req: Request) -> int:
+        """Worst-case tokens one of the request's rows can generate."""
+        if req.search is not None:
+            return req.search.max_steps * req.search.step_tokens
+        return req.max_new_tokens
 
     def _worst_case_blocks(self, req: Request) -> int:
         """Blocks the request needs when running alone at full divergence:
         shared full prompt blocks + per-sample tail-CoW and growth."""
         bs = self.engine.pool.block_size
         plen = int(req.prompt.shape[0])
-        n = max(1, req.n_samples)
+        n = self._fan(req)
         shared = plen // bs  # full prompt blocks stay shared
-        per_sample = blocks_for(plen + req.max_new_tokens, bs) - shared
+        per_sample = blocks_for(plen + self._max_new(req), bs) - shared
         return shared + n * per_sample
 
     def _pad(self, prompt):
@@ -1084,18 +1248,30 @@ class ContinuousScheduler:
         return sum(ln for _, ln in padded)
 
     def _admit_group(self, req: Request, free: list) -> int:
-        """TTS group: one batch-1 prefill forked into n_samples slots."""
-        n = req.n_samples
+        """TTS group or beam tree: one batch-1 prefill forked into
+        ``_fan(req)`` slots (samples, or beam lanes sharing the prompt's
+        blocks until their first divergent write)."""
+        n = self._fan(req)
         toks, length = self._pad(req.prompt)
         st = self.engine.prefill(toks[None], jnp.array([length], jnp.int32))
         self._count_prefill(1)
-        st = self.engine.fork(st, n)
+        if n > 1:
+            st = self.engine.fork(st, n)
         rows = [free.pop(0) for _ in range(n)]
         self._merge(st, rows)
         for j, r in enumerate(rows):
             self.slots[r] = _Slot(req=req, sample_idx=j,
                                   admitted_step=self.step_count)
+        if req.search is not None:
+            self._start_beam(req, rows)
         return int(length)
+
+    def _start_beam(self, req: Request, rows: list) -> None:
+        n = len(rows)
+        self._beams[req.req_id] = _BeamRun(
+            req=req, spec=req.search, rows=list(rows),
+            tokens=[[] for _ in range(n)], step_gen=[0] * n,
+            stopped=[False] * n)
 
     def _prompt_blocks(self, req: Request) -> int:
         return blocks_for(int(req.prompt.shape[0]),
@@ -1112,10 +1288,11 @@ class ContinuousScheduler:
         return [int(t) for t in np.asarray(jax.device_get(req.prompt)).ravel()]
 
     def _admit_cached_group(self, req: Request, free: list) -> int:
-        """Cache-aware admission of one TTS group: longest-prefix-match,
-        lease, one partial prefill of the uncached suffix, insert the
-        full prompt's blocks back into the tree, fork into n_samples
-        slots.  Returns the suffix tokens prefilled, or -1 when the pool
+        """Cache-aware admission of one TTS group or beam tree:
+        longest-prefix-match, lease, one partial prefill of the uncached
+        suffix, insert the full prompt's blocks back into the tree, fork
+        into ``_fan(req)`` slots.  Returns the suffix tokens prefilled,
+        or -1 when the pool
         cannot cover the group's *new* blocks even after cache eviction —
         the head then waits (FIFO), holding no lease."""
         toks = self._host_prompt(req)
@@ -1153,7 +1330,7 @@ class ContinuousScheduler:
             self.metrics.prefill_tokens_saved += clen
         self._insert_prompt(toks, np.asarray(jax.device_get(
             st.cache["table"]))[0])
-        n = max(1, req.n_samples)
+        n = self._fan(req)
         if n > 1:
             st = self.engine.fork(st, n)
         rows = [free.pop(0) for _ in range(n)]
@@ -1161,6 +1338,8 @@ class ContinuousScheduler:
         for j, r in enumerate(rows):
             self.slots[r] = _Slot(req=req, sample_idx=j,
                                   admitted_step=self.step_count)
+        if req.search is not None:
+            self._start_beam(req, rows)
         return len(suffix)
 
     def _collect_cached_run(self, free: list) -> list:
@@ -1189,6 +1368,7 @@ class ContinuousScheduler:
         entries: list[dict] = []
         pending = 0  # new blocks already promised to earlier entries
         while (self.queue and self.queue[0].n_samples <= 1
+               and self.queue[0].search is None
                and len(entries) < cap):
             req = self.queue[0]
             toks = self._host_prompt(req)
@@ -1276,9 +1456,10 @@ class ContinuousScheduler:
         admitted = prefill_tokens = 0
         if self.cache is not None:
             while self.queue and free:
-                if max(1, self.queue[0].n_samples) > len(free):
+                if self._fan(self.queue[0]) > len(free):
                     break  # FIFO: the group waits for enough free slots
-                if self.queue[0].n_samples > 1:
+                if (self.queue[0].n_samples > 1
+                        or self.queue[0].search is not None):
                     got = self._admit_cached_group(self.queue[0], free)
                     if got < 0:
                         break  # FIFO: the head waits for blocks
@@ -1294,12 +1475,11 @@ class ContinuousScheduler:
             return admitted, prefill_tokens
         blk_budget = self.engine.pool.free_blocks if self.paged else None
         while self.queue and free:
-            n_head = max(1, self.queue[0].n_samples)
-            if n_head > len(free):
+            if self._fan(self.queue[0]) > len(free):
                 break  # FIFO: the group waits for enough free slots
             if self.paged and self._prompt_blocks(self.queue[0]) > blk_budget:
                 break  # FIFO: the head waits for blocks to free up
-            if self.queue[0].n_samples > 1:
+            if self.queue[0].n_samples > 1 or self.queue[0].search is not None:
                 req = self.queue.popleft()
                 if self.paged:
                     blk_budget -= self._prompt_blocks(req)
@@ -1308,6 +1488,7 @@ class ContinuousScheduler:
                 continue
             plain = []
             while (self.queue and self.queue[0].n_samples <= 1
+                   and self.queue[0].search is None
                    and len(plain) < self._batch_cap(free)):
                 if self.paged:
                     need = self._prompt_blocks(self.queue[0])
@@ -1360,11 +1541,130 @@ class ContinuousScheduler:
         for r in rows:
             self.slots[r] = None
         # discard any already-finished samples of the victim; the rerun
-        # regenerates every sample (deterministic under greedy sampling)
+        # regenerates every sample (deterministic under greedy sampling).
+        # A beam victim drops its whole in-flight tree the same way: its
+        # lanes' blocks just freed above, and re-admission restarts the
+        # search from the prompt.
+        self._beams.pop(victim, None)
         dropped = self.completed.pop(victim, [])
         self.metrics.completed_samples -= len(dropped)
         self.queue.appendleft(req)
         self.metrics.preemptions += 1
+
+    # -- beam-search (tree) workload -----------------------------------------
+    def _row_stops(self):
+        """Per-row extra stop ids for the decode step: each in-flight
+        tree's lanes stop at its step delimiter; every other row gets -1
+        (no extra stop).  None when no tree is in flight (keeps the
+        row_stops-free jit trace for pure chat/BoN traffic)."""
+        if not self._beams:
+            return None
+        stops = np.full((self.n_slots,), -1, np.int32)
+        for run in self._beams.values():
+            stops[run.rows] = run.spec.step_stop_id
+        return jnp.asarray(stops)
+
+    def _beam_track(self, toks_h, done_h) -> tuple:
+        """Advance every in-flight tree's host bookkeeping after a decode
+        step.  Returns (rows to freeze, runs at their scoring boundary):
+        a lane that exhausts its step token budget without sampling the
+        delimiter is *frozen* (done on device, blocks kept) so it stops
+        advancing while sibling lanes finish their step."""
+        to_freeze: list = []
+        boundaries: list = []
+        for run in self._beams.values():
+            for j, r in enumerate(run.rows):
+                if run.stopped[j]:
+                    continue
+                run.tokens[j].append(int(toks_h[r]))
+                run.step_gen[j] += 1
+                if bool(done_h[r]):      # sampled '.'/eos this step
+                    run.stopped[j] = True
+                elif run.step_gen[j] >= run.spec.step_tokens:
+                    run.stopped[j] = True
+                    to_freeze.append(r)
+            if all(run.stopped):
+                boundaries.append(run)
+        return to_freeze, boundaries
+
+    def _beam_boundary(self, run: _BeamRun):
+        """Scoring boundary: one batched score call over all fan
+        candidates, then either final selection or a prune+expand commit.
+
+        The commit is ONE ``engine.reorder`` whose index is identity
+        outside the tree's rows and maps lane j to survivor ``keep[j //
+        expand]`` inside them — on the paged pool the reorder's refcount
+        fixup *is* the tree update: losing lanes' blocks drop to refcount
+        zero and free (prune), each survivor's blocks gain ``expand - 1``
+        references (expansion, zero KV bytes copied) and diverge later
+        via copy-on-write."""
+        spec, rows = run.spec, run.rows
+        lp, ng = (np.asarray(a) for a in jax.device_get(
+            (self.state.logprob_sum, self.state.n_gen)))
+        scores = np.asarray(
+            spec.score([list(t) for t in run.tokens], lp[rows], ng[rows]),
+            np.float64).ravel()
+        self.metrics.prm_batches += 1
+        self.metrics.prm_candidates += len(rows)
+        # stable sort: ties keep the lowest lane index, matching the
+        # direct path's jnp.argsort over -scores
+        keep = np.argsort(-scores, kind="stable")[:spec.width]
+        run.beam_step += 1
+        self.metrics.beam_boundaries += 1
+        survivors = [list(run.tokens[int(k)]) for k in keep]
+        if run.beam_step >= spec.max_steps or (
+                spec.finished is not None and spec.finished(survivors)):
+            self._finish_beam(run, keep, survivors, lp, ng)
+            return
+        idx = np.arange(self.n_slots, dtype=np.int32)
+        for j in range(len(rows)):
+            idx[rows[j]] = rows[int(keep[j // spec.expand])]
+        self.state = self.engine.reorder(self.state, jnp.asarray(idx))
+        self.metrics.beam_expansions += len(rows) - spec.width
+        self.metrics.beam_prunes += len(rows) - spec.width
+        run.tokens = [list(survivors[j // spec.expand])
+                      for j in range(len(rows))]
+        run.step_gen = [0] * len(rows)
+        run.stopped = [False] * len(rows)
+        self.state = self.engine.resume_rows(self.state, rows)
+
+    def _finish_beam(self, run: _BeamRun, keep, survivors, lp, ng):
+        """Final selection: score the ``width`` survivors, record the
+        choice in ``beam_results``, emit one ``CompletedSample`` per
+        survivor and release every lane's blocks."""
+        spec, rows, req = run.spec, run.rows, run.req
+        final = spec.final_score or spec.score
+        krows = [rows[int(k)] for k in keep]
+        final_scores = np.asarray(
+            final(survivors, lp[krows], ng[krows]), np.float64).ravel()
+        self.metrics.prm_batches += 1
+        self.metrics.prm_candidates += len(survivors)
+        if self.cache is not None:
+            # the tree's full prompt blocks sit below every lane's write
+            # frontier (never CoW'd) — reusable by later requests
+            table = np.asarray(jax.device_get(self.state.cache["table"]))
+            self._insert_prompt(self._host_prompt(req), table[rows[0]])
+        first = self.slots[rows[0]]
+        self.state = self.engine.release_rows(self.state, rows)
+        done_list = self.completed.setdefault(req.req_id, [])
+        for j, k in enumerate(keep):
+            r = rows[int(k)]
+            done_list.append(CompletedSample(
+                req_id=req.req_id, sample_idx=j, tokens=list(survivors[j]),
+                logprob_sum=float(lp[r]), n_gen=int(ng[r]),
+                finish_reason="beam", admitted_step=first.admitted_step,
+                first_decode_step=first.first_decode_step,
+                finished_step=self.step_count))
+        self.beam_results[req.req_id] = {
+            "scores": [float(s) for s in final_scores],
+            "chosen": int(np.argmax(final_scores)),
+            "beam_steps": run.beam_step,
+        }
+        self.metrics.completed_samples += len(survivors)
+        self.metrics.completed_requests += 1
+        for r in rows:
+            self.slots[r] = None
+        del self._beams[req.req_id]
 
     # -- the admit -> decode -> release cycle --------------------------------
     def step_once(self, rng, sc: SamplerConfig = SamplerConfig()) -> bool:
@@ -1379,8 +1679,9 @@ class ContinuousScheduler:
                 self.slots[i].first_decode_step = self.step_count
         while True:
             try:
-                self.state, toks = self.engine.step(self.state, rng, sc,
-                                                    stop_ids=self.stop_ids)
+                self.state, toks = self.engine.step(
+                    self.state, rng, sc, stop_ids=self.stop_ids,
+                    row_stops=self._row_stops())
                 break
             except OutOfBlocks:
                 # atomic: the failed prepare touched neither pool nor state
@@ -1394,6 +1695,8 @@ class ContinuousScheduler:
         released_reqs: list[tuple] = []
         for i in live:
             slot = self.slots[i]
+            if slot.req.search is not None:
+                continue  # beam lanes: tracked per-tree below
             if bool(done_h[i]):          # sampled a stop id this step
                 released_reqs.append((i, slot.req))
                 self._release(i, "stop", float(lp_h[i]), int(ng_h[i]))
@@ -1429,6 +1732,12 @@ class ContinuousScheduler:
             # freeze the rows so they stop growing until a new occupant
             # overwrites them at admission
             self.state = self.engine.release_rows(self.state, over_budget)
+        if self._beams:
+            to_freeze, boundaries = self._beam_track(toks_h, done_h)
+            if to_freeze:
+                self.state = self.engine.freeze_rows(self.state, to_freeze)
+            for run in boundaries:
+                self._beam_boundary(run)
         if self.paged:
             # pool.peak_in_use also sees intra-step highs (CoW before
             # release), so this is the true byte high-water mark

@@ -36,13 +36,17 @@ def _mask_top_k(logits, k):
 
 
 def _mask_top_p(logits, p):
-    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    # argsort is stable, so among tied logits lower token ids sort first
+    order = jnp.argsort(-logits, axis=-1)
+    sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
     probs = jax.nn.softmax(sorted_logits, axis=-1)
     cum = jnp.cumsum(probs, axis=-1)
-    # keep smallest prefix with cumulative prob >= p (always keep first)
+    # keep smallest prefix with cumulative prob >= p (always keep first);
+    # mask by sorted *rank*, not by value: a value cutoff would keep every
+    # token tied with the nucleus boundary and overshoot the target mass
     cutoff_idx = jnp.sum(cum < p, axis=-1, keepdims=True)
-    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
-    return jnp.where(logits >= cutoff, logits, -jnp.inf)
+    ranks = jnp.argsort(order, axis=-1)
+    return jnp.where(ranks <= cutoff_idx, logits, -jnp.inf)
 
 
 def sample(logits: jnp.ndarray, rng, sc: SamplerConfig) -> jnp.ndarray:
@@ -68,6 +72,18 @@ def logprobs_of(logits: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def _merge_shard_winners(loc_max, loc_arg, axis):
+    """Global argmax across shards with unsharded-``jnp.argmax`` tie
+    semantics: among shards achieving the global max, the *lowest* global
+    index wins (pmin over winner candidates; losers contribute INT32_MAX).
+    A pmax merge would pick the highest index and diverge from the
+    reference single-device decode on tied logits."""
+    glob_max = jax.lax.pmax(loc_max, axis)
+    winner = jnp.where(loc_max >= glob_max, loc_arg,
+                       jnp.iinfo(jnp.int32).max)
+    return jax.lax.pmin(winner, axis).astype(jnp.int32)
+
+
 def _local_gumbel_max(logits_loc, rng, temperature, axis, vocab_per_shard):
     shard = jax.lax.axis_index(axis)
     # per-shard iid gumbel noise: fold the shard id into the key
@@ -77,18 +93,14 @@ def _local_gumbel_max(logits_loc, rng, temperature, axis, vocab_per_shard):
     y = logits_loc / jnp.maximum(temperature, 1e-6) + g
     loc_max = jnp.max(y, axis=-1)
     loc_arg = jnp.argmax(y, axis=-1) + shard * vocab_per_shard
-    glob_max = jax.lax.pmax(loc_max, axis)
-    winner = jnp.where(loc_max >= glob_max, loc_arg, -1)
-    return jax.lax.pmax(winner, axis).astype(jnp.int32)
+    return _merge_shard_winners(loc_max, loc_arg, axis)
 
 
 def _local_greedy(logits_loc, axis, vocab_per_shard):
     shard = jax.lax.axis_index(axis)
     loc_max = jnp.max(logits_loc, axis=-1)
     loc_arg = jnp.argmax(logits_loc, axis=-1) + shard * vocab_per_shard
-    glob_max = jax.lax.pmax(loc_max, axis)
-    winner = jnp.where(loc_max >= glob_max, loc_arg, -1)
-    return jax.lax.pmax(winner, axis).astype(jnp.int32)
+    return _merge_shard_winners(loc_max, loc_arg, axis)
 
 
 def distributed_sample(logits: jnp.ndarray, rng, sc: SamplerConfig,

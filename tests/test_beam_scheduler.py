@@ -1,0 +1,281 @@
+"""Tree-search-as-a-scheduler-workload tests: scheduler-served beam search
+vs the direct ``core.beam_search`` path (greedy bit-parity on fp and
+quantized paged pools), mixed beam + chat + Best-of-N queues, preemption
+of starved trees, batched PRM scoring, and the direct-path block-release
+fix (normal return and exception paths)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import reward as R
+from repro.core.beam_search import beam_search
+from repro.core.controller import serve_beam_search
+from repro.data import tasks as T
+from repro.serving.engine import (BeamSpec, ContinuousScheduler,
+                                  DecodeEngine, Request)
+from repro.serving.sampler import SamplerConfig
+
+NO_STOP = (9999,)
+GREEDY = SamplerConfig(greedy=True)
+
+# small enough to finish fast, large enough for >1 scoring boundary
+WIDTH, EXPAND, STEP_TOKENS, MAX_STEPS = 2, 2, 6, 2
+PROMPT_LEN = 16
+
+
+def _paged_engine(trained_tiny, tiny_cfg, tok, n_blocks, kv_quant="none"):
+    return DecodeEngine(trained_tiny, tiny_cfg, max_len=64,
+                        eos_id=tok.eos_id, pad_id=tok.pad_id, paged=True,
+                        block_size=8, n_blocks=n_blocks, kv_quant=kv_quant)
+
+
+@pytest.fixture(scope="module")
+def paged_engine(trained_tiny, tiny_cfg, tok):
+    return _paged_engine(trained_tiny, tiny_cfg, tok, n_blocks=48)
+
+
+@pytest.fixture(scope="module")
+def paged_engine_q8(trained_tiny, tiny_cfg, tok):
+    return _paged_engine(trained_tiny, tiny_cfg, tok, n_blocks=48,
+                         kv_quant="q8")
+
+
+def _beam_tasks(n):
+    return T.gen_dataset(17, n, reasoning=True, max_terms=2)
+
+
+def _direct(engine, tok, task, prm, rng):
+    return beam_search(engine, tok, task, width=WIDTH, expand=EXPAND,
+                       max_steps=MAX_STEPS, step_tokens=STEP_TOKENS,
+                       rng=rng, prm=prm, sc=GREEDY, prompt_len=PROMPT_LEN)
+
+
+def _served(engine, tok, tasks, prm, rng):
+    return serve_beam_search(engine, tok, tasks, width=WIDTH, expand=EXPAND,
+                             step_tokens=STEP_TOKENS, max_steps=MAX_STEPS,
+                             rng=rng, prm=prm, n_slots=8,
+                             prompt_len=PROMPT_LEN, sc=GREEDY)
+
+
+def _assert_parity(engine, tok, tasks, prm):
+    """Greedy direct-vs-scheduler bit-parity + zero-leak on both paths."""
+    assert engine.pool.blocks_in_use == 0
+    direct = [_direct(engine, tok, t, prm, jax.random.key(0))
+              for t in tasks]
+    assert engine.pool.blocks_in_use == 0  # direct path releases its tree
+    row = _served(engine, tok, tasks, prm, jax.random.key(0))
+    assert engine.pool.blocks_in_use == 0  # scheduler drains clean
+    for d, s in zip(direct, row["results"]):
+        assert s.completions == d.completions
+        assert s.chosen == d.chosen
+        assert s.answer == d.answer
+    return row
+
+
+def test_scheduler_beam_matches_direct_paged_fp(paged_engine, tok):
+    """Greedy beam search through the scheduler is bit-identical to the
+    direct path (same candidates, same PRM scores, same winner), and the
+    PRM runs exactly one forward per scoring boundary / final selection."""
+    cfg = R.reward_config(tok.vocab_size)
+    prm = R.LearnedScorer(R.init_reward_params(jax.random.key(1), cfg),
+                          cfg, tok)
+    tasks = _beam_tasks(2)
+    base = prm.n_forwards
+    row = _assert_parity(paged_engine, tok, tasks, prm)
+    s = row["serving"]
+    assert s["completed_requests"] == 2
+    assert s["completed_samples"] == 2 * WIDTH
+    # every boundary scored all live candidates in ONE batched call; the
+    # direct run above issued its own forwards, so count scheduler-side
+    # batches against the metrics, not against `base`
+    assert s["beam_boundaries"] >= 2            # >= 1 per task
+    assert s["beam_expansions"] == s["beam_prunes"]
+    assert s["prm_batches"] >= s["beam_boundaries"]
+    assert s["prm_candidates"] >= s["prm_batches"] * WIDTH
+    assert s["prm_candidates_per_batch"] > 1.0  # really batched
+    assert prm.n_forwards > base                # forwards were counted
+
+
+def test_scheduler_beam_matches_direct_paged_q8(paged_engine_q8, tok):
+    """Same parity property on the tile-quantized Q8 block pool: fork /
+    reorder / release move quantized blocks identically."""
+    _assert_parity(paged_engine_q8, tok, _beam_tasks(1), R.LogProbScorer())
+
+
+def _mean_logprob_spec(tok, step_tokens=STEP_TOKENS, max_steps=MAX_STEPS,
+                       delim="."):
+    """Tokenizer-free BeamSpec for driving the scheduler directly."""
+    def score(token_lists, lp, ng):
+        return np.asarray(lp) / np.maximum(np.asarray(ng), 1)
+    stop = int(tok.encode(delim, bos=False)[0])
+    return BeamSpec(width=WIDTH, expand=EXPAND, step_tokens=step_tokens,
+                    max_steps=max_steps, step_stop_id=stop, score=score)
+
+
+def _reference_tokens(engine, tok, text, max_new, prompt_len=PROMPT_LEN):
+    """Per-request greedy DecodeEngine run with the scheduler's padding."""
+    ids = tok.encode(text)
+    padded = jnp.full((prompt_len,), engine.pad_id, jnp.int32)
+    padded = padded.at[: len(ids)].set(jnp.asarray(ids))
+    st = engine.prefill(padded[None], jnp.array([len(ids)], jnp.int32))
+    st, out = engine.generate(st, max_new, jax.random.key(0), GREEDY,
+                              stop_ids=NO_STOP)
+    if engine.paged:
+        engine.release_rows(st, [0])
+    return out[0].tolist()
+
+
+def test_mixed_queue_beam_chat_bon(paged_engine, tok):
+    """A beam tree, plain chat requests and a Best-of-N fan-out coexist in
+    one slot pool: the per-row stop mask only affects the tree's lanes
+    (chat rows match the per-request reference exactly), and a full drain
+    leaves zero blocks in use."""
+    engine = paged_engine
+    assert engine.pool.blocks_in_use == 0
+    sched = ContinuousScheduler(engine, n_slots=8, prompt_len=PROMPT_LEN,
+                                stop_ids=NO_STOP)
+    task = _beam_tasks(1)[0]
+    sched.submit(Request(req_id=0, prompt=jnp.asarray(tok.encode(task.prompt)),
+                         search=_mean_logprob_spec(tok)))
+    chat = {1: "Q:7+5=?A:", 2: "Q:19+23=?A:"}
+    for rid, text in chat.items():
+        sched.submit(Request(req_id=rid,
+                             prompt=jnp.asarray(tok.encode(text)),
+                             max_new_tokens=10))
+    sched.submit(Request(req_id=3, prompt=jnp.asarray(tok.encode("Q:2+2=?A:")),
+                         max_new_tokens=8, n_samples=2))
+    res = sched.run(jax.random.key(0), GREEDY)
+
+    assert set(res) == {0, 1, 2, 3}
+    # chat rows decoded alongside the tree are untouched by its row_stops
+    # mask: bit-identical to a solo greedy run
+    for rid, text in chat.items():
+        assert res[rid] == _reference_tokens(engine, tok, text, 10)
+    assert len(res[3]) == 2                       # BoN fan-out intact
+    assert len(res[0]) == WIDTH                   # tree emits width samples
+    assert all(s.finish_reason == "beam" for s in sched.completed[0])
+    assert 0 in sched.beam_results
+    assert sched.beam_results[0]["beam_steps"] >= 1
+    s = sched.metrics.summary()
+    assert s["beam_boundaries"] >= 1 and s["prm_batches"] >= 1
+    assert engine.pool.blocks_in_use == 0
+
+
+def test_beam_preempted_under_block_pressure(trained_tiny, tiny_cfg, tok):
+    """On a starved pool the youngest request is preempted when the tree's
+    copy-on-write growth exhausts blocks — everything still completes and
+    the pool drains to zero."""
+    engine = _paged_engine(trained_tiny, tiny_cfg, tok, n_blocks=10)
+    sched = ContinuousScheduler(engine, n_slots=6, prompt_len=PROMPT_LEN,
+                                stop_ids=NO_STOP)
+    task = _beam_tasks(1)[0]
+    # a delimiter greedy decoding never samples: every lane exhausts its
+    # full step budget (freeze path), so the tree stays live long enough
+    # for the chats' cache growth to exhaust the pool
+    sched.submit(Request(req_id=0, prompt=jnp.asarray(tok.encode(task.prompt)),
+                         search=_mean_logprob_spec(tok, delim="z")))
+    sched.submit(Request(req_id=1, prompt=jnp.asarray(tok.encode("Q:5+6=?A:")),
+                         max_new_tokens=12))
+    sched.submit(Request(req_id=2, prompt=jnp.asarray(tok.encode("Q:8+9=?A:")),
+                         max_new_tokens=12))
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert set(res) == {0, 1, 2}
+    assert len(res[0]) == WIDTH
+    assert sched.metrics.summary()["preemptions"] >= 1
+    assert engine.pool.blocks_in_use == 0
+
+
+def test_prm_step_batch_matches_sequential(tok):
+    """``score_step_batch`` scores every candidate's last step in ONE
+    forward and matches per-candidate ``score_steps`` exactly — the
+    scheduler's batched boundary call is a pure batching of the direct
+    path's sequential loop."""
+    cfg = R.reward_config(tok.vocab_size)
+    sc = R.LearnedScorer(R.init_reward_params(jax.random.key(2), cfg),
+                         cfg, tok)
+    task = T.gen_dataset(23, 1, reasoning=True)[0]
+    comps = ["3+4=7.", "3+4=8.", "3+4=7.7+5=12.", "no delimiter yet"]
+    seq = np.asarray([np.asarray(sc.score_steps(task, c))[-1]
+                      for c in comps])
+    base = sc.n_forwards
+    batch = np.asarray(sc.score_step_batch(task, comps))
+    assert sc.n_forwards == base + 1         # one forward for all four
+    np.testing.assert_allclose(batch, seq, rtol=1e-5, atol=1e-6)
+
+
+def test_direct_beam_search_releases_blocks(paged_engine, tok):
+    """The direct path frees every pool block it held on normal return
+    (the leak serve.py used to warn about)."""
+    engine = paged_engine
+    assert engine.pool.blocks_in_use == 0
+    r = _direct(engine, tok, _beam_tasks(1)[0], R.LogProbScorer(),
+                jax.random.key(0))
+    assert len(r.completions) == WIDTH
+    assert engine.pool.blocks_in_use == 0
+
+
+def test_direct_beam_search_releases_blocks_on_error(paged_engine, tok):
+    """...and on the exception path: a PRM that blows up mid-search must
+    not strand the tree's blocks in the pool."""
+
+    class Boom:
+        def score_texts(self, task, texts):
+            raise RuntimeError("prm fell over")
+
+    engine = paged_engine
+    assert engine.pool.blocks_in_use == 0
+    with pytest.raises(RuntimeError, match="prm fell over"):
+        _direct(engine, tok, _beam_tasks(1)[0], Boom(), jax.random.key(0))
+    assert engine.pool.blocks_in_use == 0
+
+
+def test_beam_submit_validation(paged_engine, tok):
+    """Malformed tree requests are rejected at submit time."""
+    sched = ContinuousScheduler(paged_engine, n_slots=4,
+                                prompt_len=PROMPT_LEN)
+    prompt = jnp.asarray(tok.encode("Q:1+2=?A:"))
+    spec = _mean_logprob_spec(tok)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        sched.submit(Request(req_id=0, prompt=prompt, n_samples=2,
+                             search=spec))
+    with pytest.raises(ValueError, match="score is required"):
+        sched.submit(Request(req_id=1, prompt=prompt,
+                             search=BeamSpec(width=2, expand=2,
+                                             step_stop_id=46)))
+    with pytest.raises(ValueError, match="step_stop_id"):
+        bad = BeamSpec(width=2, expand=2, score=spec.score)
+        sched.submit(Request(req_id=2, prompt=prompt, search=bad))
+    with pytest.raises(ValueError, match="exceeds n_slots"):
+        wide = BeamSpec(width=4, expand=2, step_stop_id=46,
+                        score=spec.score)
+        sched.submit(Request(req_id=3, prompt=prompt, search=wide))
+
+
+def test_beam_with_prefix_cache(trained_tiny, tiny_cfg, tok):
+    """Finished trees insert their prompt into the prefix cache; a repeat
+    submission of the same task re-uses the cached prefix blocks and the
+    pool holds exactly the cache's pins after drain."""
+    from repro.serving.prefix_cache import PrefixCache
+
+    engine = _paged_engine(trained_tiny, tiny_cfg, tok, n_blocks=48)
+    cache = PrefixCache(engine.pool)
+    tasks = _beam_tasks(1)
+    row1 = serve_beam_search(engine, tok, tasks, width=WIDTH, expand=EXPAND,
+                             step_tokens=STEP_TOKENS, max_steps=MAX_STEPS,
+                             rng=jax.random.key(0), prm=R.LogProbScorer(),
+                             n_slots=8, prompt_len=PROMPT_LEN, sc=GREEDY,
+                             prefix_cache=cache)
+    pinned = cache.stats()["cached_blocks"]
+    assert pinned >= 1                       # prompt prefix was inserted
+    assert engine.pool.blocks_in_use == pinned
+    row2 = serve_beam_search(engine, tok, tasks, width=WIDTH, expand=EXPAND,
+                             step_tokens=STEP_TOKENS, max_steps=MAX_STEPS,
+                             rng=jax.random.key(0), prm=R.LogProbScorer(),
+                             n_slots=8, prompt_len=PROMPT_LEN, sc=GREEDY,
+                             prefix_cache=cache)
+    assert cache.stats()["hits"] >= 1        # cached admission path taken
+    assert engine.pool.blocks_in_use == cache.stats()["cached_blocks"]
+    # greedy: the cached-prefix run reproduces the uncached run exactly
+    assert (row2["results"][0].completions == row1["results"][0].completions)
+    assert row2["results"][0].chosen == row1["results"][0].chosen

@@ -191,3 +191,35 @@ def test_elastic_restore_across_meshes(tmp_path):
             assert all(jax.tree.leaves(ok))
         print("elastic restore ok")
     """)
+
+
+def test_distributed_greedy_tie_break_matches_argmax():
+    """Tied logits across vocab shards: the shard-winner merge must pick
+    the LOWEST global index (like unsharded ``jnp.argmax``), not whichever
+    shard the pmax reduction visits last."""
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.sharding import ParallelContext
+        from repro.launch.mesh import make_host_mesh
+        from repro.serving.sampler import SamplerConfig, distributed_sample
+
+        par = ParallelContext(mesh=make_host_mesh(1, 8))
+        V = 64  # 8 tokens per shard
+        # ties spanning shards: {7, 23, 55} -> 7, {0, 63} -> 0,
+        # {40, 41} (same shard) -> 40
+        rows = np.full((3, V), -5.0, np.float32)
+        rows[0, [7, 23, 55]] = 2.0
+        rows[1, [0, 63]] = 1.0
+        rows[2, [40, 41]] = 3.0
+        logits = jnp.asarray(rows)
+        tok = distributed_sample(logits, jax.random.key(0),
+                                 SamplerConfig(greedy=True), par)
+        np.testing.assert_array_equal(np.asarray(tok), [7, 0, 40])
+        np.testing.assert_array_equal(np.asarray(tok),
+                                      np.asarray(jnp.argmax(logits, -1)))
+        # gumbel path still returns valid ids under ties
+        tok2 = distributed_sample(logits, jax.random.key(1),
+                                  SamplerConfig(temperature=1.0), par)
+        assert ((np.asarray(tok2) >= 0) & (np.asarray(tok2) < V)).all()
+        print("tie-break ok")
+    """)

@@ -211,6 +211,21 @@ def test_sampler_top_k_top_p():
     assert int(t[0]) == 0  # nucleus of 0.5 keeps only the argmax here
 
 
+def test_sampler_top_p_ties_respect_target_mass():
+    """Tied logits at the nucleus boundary: the mask cuts by sorted rank,
+    not by value, so a four-way tie at p=0.5 keeps exactly two tokens
+    (a value cutoff would keep all four and double the target mass)."""
+    logits = jnp.log(jnp.array([[0.25, 0.25, 0.25, 0.25]]))
+    hits = {int(sample(logits, jax.random.key(i),
+                       SamplerConfig(top_p=0.5))[0]) for i in range(40)}
+    assert hits == {0, 1}  # stable sort: lowest ids fill the nucleus
+    # ties *below* the boundary still sample freely
+    logits = jnp.log(jnp.array([[0.1, 0.3, 0.1, 0.3, 0.2]]))
+    hits = {int(sample(logits, jax.random.key(i),
+                       SamplerConfig(top_p=0.6))[0]) for i in range(40)}
+    assert hits == {1, 3}
+
+
 # ---------------------------------------------------------------------------
 # TTS algorithms
 # ---------------------------------------------------------------------------
