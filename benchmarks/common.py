@@ -73,6 +73,13 @@ def trained_tiny():
 #   snapshot with a TIME_FLOOR_US floor (CI machines are noisy; the
 #   trajectory is the signal, the gate only catches catastrophes).  Both
 #   knobs are env-overridable (REPRO_BENCH_TIME_FACTOR / _TIME_FLOOR_US).
+# * latency percentiles (``ttft_*``/``itl_*``/``queue_wait*``/
+#   ``step_time*``, reported in ms) get the same catastrophe-only shape
+#   with their own, even more generous knobs: LAT_FACTOR× the snapshot
+#   with a LAT_FLOOR_MS floor (tail percentiles jitter far more than
+#   medians on shared CI machines; the gate exists to catch a scheduler
+#   regression that stalls requests, not a slow runner).  Env-overridable
+#   via REPRO_BENCH_LAT_FACTOR / _LAT_FLOOR_MS.
 # * a row present in the snapshot but missing from the run is a failure.
 #
 # Everything else rides along informationally — the snapshot file itself
@@ -82,11 +89,17 @@ ERR_RATIO = 4.0
 REDUCTION_SLACK_POINTS = 5.0
 ACC_SLACK = 0.26
 _ACC_KEYS = ("accuracy", "fp_accuracy", "hit_rate")
+_LAT_PREFIXES = ("ttft_", "itl_", "queue_wait", "step_time")
 
 
 def _time_envelope() -> tuple[float, float]:
     return (float(os.environ.get("REPRO_BENCH_TIME_FACTOR", "10")),
             float(os.environ.get("REPRO_BENCH_TIME_FLOOR_US", "500")))
+
+
+def _latency_envelope() -> tuple[float, float]:
+    return (float(os.environ.get("REPRO_BENCH_LAT_FACTOR", "25")),
+            float(os.environ.get("REPRO_BENCH_LAT_FLOOR_MS", "50")))
 
 
 def parse_metrics(derived: str) -> dict:
@@ -154,6 +167,12 @@ def check_snapshot(area: str, rows, old: dict) -> list[str]:
                 if vn < vo - ACC_SLACK:
                     bad.append(f"{area}:{name}: {k} {vn:.3f} dropped > "
                                f"{ACC_SLACK} below snapshot {vo:.3f}")
+            elif k.startswith(_LAT_PREFIXES):
+                lf, lfloor = _latency_envelope()
+                if vn > lf * max(vo, lfloor):
+                    bad.append(f"{area}:{name}: {k} {vn:.1f}ms > "
+                               f"{lf:.0f}x envelope over "
+                               f"{max(vo, lfloor):.1f}ms")
     return bad
 
 

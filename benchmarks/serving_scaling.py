@@ -28,6 +28,12 @@ serving.beam — step-level PRM beam search as a scheduler workload vs the
           direct per-task loop: asserts greedy bit-parity, a leak-free
           pool after both paths, and batched PRM scoring (one scorer
           forward per scoring boundary) before reporting tree metrics.
+serving.latency — tail-latency percentiles (TTFT / inter-token / queue
+          wait / step time) for a mixed chat + Best-of-N + beam workload
+          on a deliberately tight paged pool, recorded by the request-
+          lifecycle Tracer; the emitted *_ms metrics are enforced by the
+          snapshot check's latency envelope and the in-memory Chrome
+          trace must pass schema validation before the row emits.
 
 Standalone smoke (CI keeps the paged paths alive):
 
@@ -35,6 +41,7 @@ Standalone smoke (CI keeps the paged paths alive):
     PYTHONPATH=src python -m benchmarks.serving_scaling --prefix-cache --dry
     PYTHONPATH=src python -m benchmarks.serving_scaling --kv-quant q8 --dry
     PYTHONPATH=src python -m benchmarks.serving_scaling --beam --dry
+    PYTHONPATH=src python -m benchmarks.serving_scaling --latency --dry
 """
 from __future__ import annotations
 
@@ -48,9 +55,11 @@ from repro.core import reward as R
 from repro.core.best_of_n import best_of_n
 from repro.core.self_consistency import self_consistency
 from repro.data import tasks as T
-from repro.serving.engine import ContinuousScheduler, DecodeEngine, Request
+from repro.serving.engine import (BeamSpec, ContinuousScheduler, DecodeEngine,
+                                  Request)
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import SamplerConfig
+from repro.serving.telemetry import Tracer, validate_chrome_trace
 
 
 def fig8_attention_breakdown():
@@ -449,6 +458,82 @@ def beam_serving(n_tasks: int = 6, dry: bool = False):
          f"accuracy={row['accuracy']:.3f} parity=ok leak=0")
 
 
+def latency_serving(n_requests: int = 10, n_slots: int = 4,
+                    block_size: int = 8, dry: bool = False):
+    """serving.latency: tail-latency percentiles for a mixed chat + BoN +
+    beam workload on a deliberately tight paged pool (block pressure, so
+    queueing and possibly preemption shape the tail).
+
+    A :class:`~repro.serving.telemetry.Tracer` records the request
+    lifecycle; the row emits the ``SchedulerMetrics.summary()``
+    percentiles in ms — ``ttft_p50/p99``, ``itl_p50/p99``,
+    ``queue_wait_p99``, ``step_time_p50/p99`` — which the snapshot
+    check enforces under the generous latency envelope
+    (``REPRO_BENCH_LAT_FACTOR`` × with a ``REPRO_BENCH_LAT_FLOOR_MS``
+    floor).  The in-memory Chrome trace must validate before the row
+    emits, so the exporter schema is exercised on every benchmark run,
+    not just the serve.py CI smoke."""
+    import numpy as np
+
+    if dry:
+        tok, cfg, params = _untrained_tiny()
+        n_requests = 6
+    else:
+        tok, cfg, params = trained_tiny()
+    max_len = 96
+    width, expand = 2, 2
+    n_slots = max(n_slots, width * expand)
+    # tight pool: enough for any single request's worst case, not for
+    # every slot at full length — admission waits and the tail shows it
+    eng = DecodeEngine(params, cfg, max_len=max_len, eos_id=tok.eos_id,
+                       pad_id=tok.pad_id, paged=True, block_size=block_size,
+                       n_blocks=1 + (n_slots + 1) * 4)
+    tasks = T.gen_dataset(77, n_requests, reasoning=False, max_terms=2)
+    tracer = Tracer()
+    sched = ContinuousScheduler(eng, n_slots=n_slots, prompt_len=24,
+                                stop_ids=(tok.eos_id,), tracer=tracer)
+    for i, task in enumerate(tasks):
+        sched.submit(Request(req_id=i,
+                             prompt=jnp.asarray(tok.encode(task.prompt)),
+                             max_new_tokens=4 + 8 * (i % 3)))
+    sched.submit(Request(req_id=n_requests,
+                         prompt=jnp.asarray(tok.encode(tasks[0].prompt)),
+                         max_new_tokens=8, n_samples=3))
+    dot_id = int(tok.encode(".", bos=False)[0])
+    sched.submit(Request(
+        req_id=n_requests + 1,
+        prompt=jnp.asarray(tok.encode(tasks[1].prompt)),
+        search=BeamSpec(
+            width=width, expand=expand, step_tokens=4, max_steps=2,
+            step_stop_id=dot_id,
+            score=lambda tl, lp, ng: np.asarray(lp)
+            / np.maximum(np.asarray(ng), 1))))
+    sched.run(jax.random.key(0), SamplerConfig(greedy=True))
+    s = sched.metrics.summary()
+    assert s["latency_requests"] == n_requests + 2, \
+        (f"latency records cover {s['latency_requests']} of "
+         f"{n_requests + 2} requests")
+    assert s["ttft_p99"] >= s["ttft_p50"] > 0, "TTFT percentiles degenerate"
+    assert s["itl_p99"] >= s["itl_p50"] > 0, "ITL percentiles degenerate"
+    assert s["step_time_p99"] >= s["step_time_p50"] > 0, \
+        "step-time percentiles degenerate"
+    bad = validate_chrome_trace(tracer.to_chrome_trace())
+    assert not bad, f"trace export failed schema validation: {bad[:3]}"
+    emit("serving.latency", s["wall_s"] * 1e6,
+         f"requests={s['latency_requests']} slots={s['n_slots']} "
+         f"pool_blocks={eng.pool.capacity} "
+         f"ttft_p50_ms={s['ttft_p50'] * 1e3:.2f} "
+         f"ttft_p99_ms={s['ttft_p99'] * 1e3:.2f} "
+         f"itl_p50_ms={s['itl_p50'] * 1e3:.2f} "
+         f"itl_p99_ms={s['itl_p99'] * 1e3:.2f} "
+         f"queue_wait_p99_ms={s['queue_wait_p99'] * 1e3:.2f} "
+         f"step_time_p50_ms={s['step_time_p50'] * 1e3:.2f} "
+         f"step_time_p99_ms={s['step_time_p99'] * 1e3:.2f} "
+         f"preempt_delay_ms={s['preempt_delay_s'] * 1e3:.2f} "
+         f"preemptions={s['preemptions']} "
+         f"trace_events={len(tracer.events)}")
+
+
 def dry_rows():
     """The serving snapshot area (``benchmarks.run --record/--check``):
     the three paged-engine rows in dry mode — untrained tiny model, small
@@ -459,6 +544,7 @@ def dry_rows():
     prefix_cache_serving(dry=True)
     kv_quant_serving(mode="q8", dry=True)
     beam_serving(dry=True)
+    latency_serving(dry=True)
 
 
 def run():
@@ -471,6 +557,7 @@ def run():
     prefix_cache_serving()
     kv_quant_serving()
     beam_serving()
+    latency_serving()
 
 
 if __name__ == "__main__":
@@ -486,6 +573,9 @@ if __name__ == "__main__":
     ap.add_argument("--beam", action="store_true",
                     help="run only the serving.beam section (scheduler-"
                          "served tree search vs the direct beam loop)")
+    ap.add_argument("--latency", action="store_true",
+                    help="run only the serving.latency section (traced "
+                         "mixed workload, tail-latency percentiles)")
     ap.add_argument("--dry", action="store_true",
                     help="smoke mode: untrained tiny model, small workload")
     args = ap.parse_args()
@@ -498,5 +588,7 @@ if __name__ == "__main__":
         kv_quant_serving(mode=args.kv_quant, dry=args.dry)
     elif args.beam:
         beam_serving(dry=args.dry)
+    elif args.latency:
+        latency_serving(dry=args.dry)
     else:
         run()

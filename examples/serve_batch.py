@@ -30,6 +30,7 @@ from repro.serving.engine import ContinuousScheduler, DecodeEngine, Request
 from repro.serving.kv_pool import dense_kv_bytes
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import SamplerConfig
+from repro.serving.telemetry import Tracer
 
 PAGED = "--dense" not in sys.argv[1:]
 tok = ByteTokenizer()
@@ -46,8 +47,11 @@ HEADER = fewshot_header(seed=3, n_shots=2)  # the shared cross-request prefix
 prompts = [HEADER + f"Q:{a}+{b}=?A:" for a, b in [(1, 2), (3, 4), (5, 6),
                                                    (7, 8), (2, 9), (4, 4)]]
 prompt_len = max(len(tok.encode(p)) for p in prompts) + 1
+# the tracer records each request's lifecycle (enqueue/admit/first_token/
+# token/release), which is where the TTFT / inter-token-latency
+# percentiles below come from
 sched = ContinuousScheduler(engine, n_slots=4, prompt_len=prompt_len,
-                            prefix_cache=cache)
+                            prefix_cache=cache, tracer=Tracer())
 for i, p in enumerate(prompts):
     # mixed budgets: short and long requests churn slots at different times
     sched.submit(Request(req_id=i, prompt=jnp.asarray(tok.encode(p)),
@@ -81,6 +85,13 @@ print(f"admission: prefill_calls={m['prefill_calls']} for "
       f"{m['admitted_requests']} requests "
       f"(calls/request={m['prefill_calls_per_request']:.2f}, "
       f"batch_max={m['admission_batch_max']})")
+print(f"latency: ttft_p50={m['ttft_p50'] * 1e3:.1f}ms "
+      f"ttft_p99={m['ttft_p99'] * 1e3:.1f}ms "
+      f"itl_p50={m['itl_p50'] * 1e3:.1f}ms "
+      f"itl_p99={m['itl_p99'] * 1e3:.1f}ms "
+      f"queue_wait_p99={m['queue_wait_p99'] * 1e3:.1f}ms "
+      f"step_time_p99={m['step_time_p99'] * 1e3:.1f}ms "
+      f"over {m['latency_requests']} requests")
 if PAGED:
     kv = engine.pool.stats()
     dense = dense_kv_bytes(cfg, 4, engine.max_len)

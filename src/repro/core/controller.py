@@ -103,7 +103,7 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
                     max_tokens: int, rng, scorer, n_slots: int = 8,
                     prompt_len: Optional[int] = None,
                     sc: SamplerConfig = SamplerConfig(temperature=0.8),
-                    prefix_cache=None):
+                    prefix_cache=None, tracer=None):
     """Best-of-N over a task set through the continuous-batching scheduler.
 
     Every task is one TTS request: one prefill, ``fork`` into ``n`` slots;
@@ -128,7 +128,7 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
         prompt_len = max((int(p.shape[0]) for p in prompts), default=1)
     sched = ContinuousScheduler(engine, n_slots=n_slots,
                                 prompt_len=prompt_len,
-                                prefix_cache=prefix_cache)
+                                prefix_cache=prefix_cache, tracer=tracer)
     # the pool's peak/CoW counters are lifetime values on a shared engine;
     # rebase them so this row reports its own interval, not the sweep's
     cow_base = engine.pool.reset_peak() if engine.paged else 0
@@ -190,7 +190,7 @@ def serve_beam_search(engine, tok, tasks: Sequence[T.MathTask], *,
                       max_steps: int = 8, rng, prm, n_slots: int = 8,
                       prompt_len: Optional[int] = None,
                       sc: SamplerConfig = SamplerConfig(temperature=0.8),
-                      prefix_cache=None):
+                      prefix_cache=None, tracer=None):
     """Step-level PRM beam search over a task set through the
     continuous-batching scheduler (the production counterpart of the
     direct ``core.beam_search`` path).
@@ -214,7 +214,7 @@ def serve_beam_search(engine, tok, tasks: Sequence[T.MathTask], *,
     n_slots = max(n_slots, fan)
     sched = ContinuousScheduler(engine, n_slots=n_slots,
                                 prompt_len=prompt_len,
-                                prefix_cache=prefix_cache)
+                                prefix_cache=prefix_cache, tracer=tracer)
     cow_base = engine.pool.reset_peak() if engine.paged else 0
     cache_base = prefix_cache.stats() if prefix_cache is not None else None
     dot_id = int(tok.encode(".", bos=False)[0])
@@ -259,7 +259,7 @@ def serve_beam_search(engine, tok, tasks: Sequence[T.MathTask], *,
 
 def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
           rng, scorer, *, continuous: bool = False, n_slots: int = 8,
-          prefix_cache=None):
+          prefix_cache=None, tracer=None):
     """Accuracy / decode-cost for each spec — one row per Pareto point.
 
     ``continuous=True`` runs Best-of-N and beam-search specs through the
@@ -267,6 +267,11 @@ def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
     methods fall back to the direct per-task path.  ``prefix_cache``
     (continuous rows only) is shared across every row, so common prompt
     prefixes persist across the whole sweep, not just within one row.
+    ``tracer`` (continuous rows only) is a
+    :class:`~repro.serving.telemetry.Tracer` shared the same way: every
+    row's scheduler records its lifecycle events into it, and each row's
+    ``serving`` dict carries that scheduler's ``ttft_*``/``itl_*``/
+    ``queue_wait_*``/``step_time_*`` percentile keys.
     """
     rows = []
     for spec in specs:
@@ -276,7 +281,7 @@ def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
                 engine, tok, tasks, n=spec.budget,
                 max_tokens=spec.max_tokens, rng=k, scorer=scorer,
                 n_slots=max(n_slots, spec.budget),
-                prefix_cache=prefix_cache))
+                prefix_cache=prefix_cache, tracer=tracer))
             continue
         if continuous and spec.method == "beam_search":
             rng, k = jax.random.split(rng)
@@ -286,7 +291,7 @@ def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
                 engine, tok, tasks, width=width, expand=expand,
                 step_tokens=spec.step_tokens, max_steps=spec.beam_steps,
                 rng=k, prm=scorer, n_slots=max(n_slots, width * expand),
-                prefix_cache=prefix_cache))
+                prefix_cache=prefix_cache, tracer=tracer))
             continue
         correct = cost = 0
         for task in tasks:

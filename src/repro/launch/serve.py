@@ -79,6 +79,17 @@ def main():
                          "selection")
     ap.add_argument("--step-tokens", type=int, default=16,
                     help="token budget per reasoning step")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace-event JSON of the request "
+                         "lifecycle (slots as tracks, scheduler/engine "
+                         "phase spans as nested slices, pool gauges as "
+                         "counters) to this path — open it at "
+                         "https://ui.perfetto.dev; requires --continuous")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print every serving row's full "
+                         "SchedulerMetrics.summary() dict (all latency "
+                         "percentiles included) instead of the one-line "
+                         "summaries; requires --continuous")
     ap.add_argument("--dry", action="store_true",
                     help="CI smoke: shrink tasks/budget/steps so the run "
                          "finishes in seconds while still exercising the "
@@ -148,6 +159,15 @@ def main():
 
         prefix_cache = PrefixCache(
             engine.pool, capacity_blocks=args.cache_capacity or None)
+    tracer = None
+    if args.trace or args.metrics:
+        if not args.continuous:
+            raise SystemExit("--trace/--metrics require --continuous (the "
+                             "tracer records the scheduler's request "
+                             "lifecycle)")
+        from repro.serving.telemetry import Tracer
+
+        tracer = Tracer()
     if args.fewshot:
         tasks = T.shared_prefix_dataset(123, args.tasks,
                                         n_shots=args.fewshot)
@@ -160,7 +180,12 @@ def main():
                    step_tokens=args.step_tokens)
     rows = sweep(engine, tok, tasks, [spec], jax.random.key(0), scorer,
                  continuous=args.continuous, n_slots=args.slots,
-                 prefix_cache=prefix_cache)
+                 prefix_cache=prefix_cache, tracer=tracer)
+    if args.trace:
+        tracer.write_chrome_trace(args.trace)
+        print(f"[serve] trace: {len(tracer.events)} events / "
+              f"{len(tracer.spans)} spans -> {args.trace} "
+              f"(load in https://ui.perfetto.dev)")
     if args.paged:
         # leak check: after a full drain the pool holds only the prefix
         # cache's pins — beam trees included (the pre-scheduler beam path
@@ -180,6 +205,9 @@ def main():
               f"decode_tokens={r['decode_tokens']}")
         if "serving" in r:
             s = r["serving"]
+            if args.metrics:
+                for k in sorted(s):
+                    print(f"[serve]   {k}={s[k]}")
             print(f"[serve] continuous: slots={s['n_slots']} "
                   f"occupancy={s['avg_slot_occupancy']:.2f} "
                   f"requests_per_s={s['requests_per_s']:.2f} "
@@ -189,6 +217,17 @@ def main():
                   f"calls_per_request={s['prefill_calls_per_request']:.2f} "
                   f"admission_batch_max={s['admission_batch_max']} "
                   f"preemptions={s['preemptions']}")
+            # tail latency: ttft/itl/queue_wait come from the tracer's
+            # per-request records (0 without --trace/--metrics);
+            # step_time needs no tracer (StepRecord.wall_s)
+            print(f"[serve] latency: "
+                  f"ttft_p50={s['ttft_p50'] * 1e3:.1f}ms "
+                  f"ttft_p99={s['ttft_p99'] * 1e3:.1f}ms "
+                  f"itl_p50={s['itl_p50'] * 1e3:.1f}ms "
+                  f"itl_p99={s['itl_p99'] * 1e3:.1f}ms "
+                  f"queue_wait_p99={s['queue_wait_p99'] * 1e3:.1f}ms "
+                  f"step_time_p50={s['step_time_p50'] * 1e3:.1f}ms "
+                  f"step_time_p99={s['step_time_p99'] * 1e3:.1f}ms")
             if s.get("beam_boundaries"):
                 print(f"[serve] beam: boundaries={s['beam_boundaries']} "
                       f"expansions={s['beam_expansions']} "

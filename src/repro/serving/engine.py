@@ -97,6 +97,7 @@ from repro.models import api
 from repro.serving.kv_pool import KVPool, OutOfBlocks, blocks_for
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import SamplerConfig, logprobs_of, sample
+from repro.serving.telemetry import RequestLatency, Tracer, percentile
 
 
 @dataclass
@@ -142,6 +143,10 @@ class DecodeEngine:
         self.paged = paged
         self.kv_quant = kv_quant
         self.pool: Optional[KVPool] = None
+        # phase-span telemetry (repro.serving.telemetry.Tracer); installed
+        # by ContinuousScheduler(tracer=...).  None = zero overhead: every
+        # touchpoint is behind an `is not None` guard.
+        self.tracer: Optional[Tracer] = None
         if kv_quant != "none" and not paged:
             raise ValueError("kv_quant requires the paged KV layout "
                              "(DecodeEngine(paged=True))")
@@ -282,6 +287,8 @@ class DecodeEngine:
         B, S = tokens.shape
         if lengths is None:
             lengths = jnp.full((B,), S, jnp.int32)
+        tr = self.tracer
+        t0 = tr.now() if tr is not None else 0.0
         if cached_table is not None:
             if not self.paged:
                 raise ValueError(
@@ -291,20 +298,25 @@ class DecodeEngine:
                 raise NotImplementedError(
                     "cached-prefix prefill does not support modality-stub "
                     "embeddings")
-            return self._prefill_with_prefix(tokens, lengths, cached_table,
-                                             cached_lens)
-        if self.paged:
-            return self._prefill_paged(tokens, lengths, embeddings)
-        logits, cache = self._prefill_jit(self.params, tokens, lengths,
-                                          embeddings)
-        return GenState(
-            cache=cache,
-            cache_len=lengths.astype(jnp.int32),
-            pending_logits=logits.astype(jnp.float32),
-            done=jnp.zeros((B,), bool),
-            logprob_sum=jnp.zeros((B,), jnp.float32),
-            n_gen=jnp.zeros((B,), jnp.int32),
-        )
+            st = self._prefill_with_prefix(tokens, lengths, cached_table,
+                                           cached_lens)
+        elif self.paged:
+            st = self._prefill_paged(tokens, lengths, embeddings)
+        else:
+            logits, cache = self._prefill_jit(self.params, tokens, lengths,
+                                              embeddings)
+            st = GenState(
+                cache=cache,
+                cache_len=lengths.astype(jnp.int32),
+                pending_logits=logits.astype(jnp.float32),
+                done=jnp.zeros((B,), bool),
+                logprob_sum=jnp.zeros((B,), jnp.float32),
+                n_gen=jnp.zeros((B,), jnp.int32),
+            )
+        if tr is not None:
+            tr.span("prefill", t0, batch=int(B),
+                    cached=cached_table is not None)
+        return st
 
     def _prefill_with_prefix(self, tokens, lengths, cached_table,
                              cached_lens) -> GenState:
@@ -713,7 +725,13 @@ class DecodeEngine:
         :class:`OutOfBlocks`), then scatters this step's KV into pool
         blocks in place."""
         if self.paged:
-            state = self.prepare_decode(state)
+            tr = self.tracer
+            if tr is not None:
+                t0 = tr.now()
+                state = self.prepare_decode(state)
+                tr.span("plan", t0)  # CoW/alloc host planning
+            else:
+                state = self.prepare_decode(state)
             st, tok, pk, pv = self._step_paged_jit(
                 self.params, state, self.pool.k, self.pool.v, rng,
                 row_stops, sc=sc, stop_ids=tuple(stop_ids))
@@ -901,6 +919,7 @@ class StepRecord:
     occupancy: int               # rows decoding this step (== tokens decoded)
     admitted: int                # requests admitted this step
     prefill_tokens: int          # prompt tokens prefilled this step
+    wall_s: float = 0.0          # host wall time of this step_once call
 
 
 class SchedulerMetrics:
@@ -942,6 +961,13 @@ class SchedulerMetrics:
         self.beam_prunes = 0
         self.prm_batches = 0
         self.prm_candidates = 0
+        # per-request latency records (telemetry.RequestLatency), appended
+        # by the scheduler at request completion when a Tracer is attached
+        # — the histogram behind the summary's ttft/itl/queue_wait
+        # percentiles.  Always empty without a tracer (the keys then
+        # report 0.0); step_time_* comes from StepRecord.wall_s and needs
+        # no tracer.
+        self.latencies: list[RequestLatency] = []
 
     def record(self, rec: StepRecord):
         self.records.append(rec)
@@ -962,6 +988,15 @@ class SchedulerMetrics:
         occ = (decode / (steps * self.n_slots)) if steps else 0.0
         admitted = sum(r.admitted for r in self.records)
         sizes = self.admission_batch_sizes
+        # tail latency (seconds).  Every key below must survive an
+        # admitted == 0 drain: `percentile` returns 0.0 on empty input and
+        # the list comprehensions are empty-safe, so a scheduler that
+        # never admitted anything still yields the full key set.
+        lat = self.latencies
+        ttfts = [l.ttft for l in lat]
+        waits = [l.queue_wait for l in lat]
+        gaps = [g for l in lat for g in l.gaps]
+        step_ts = [r.wall_s for r in self.records]
         return {
             "admitted_requests": admitted,
             "prefill_calls": self.prefill_calls,
@@ -998,6 +1033,17 @@ class SchedulerMetrics:
             "prm_candidates_per_batch": (self.prm_candidates
                                          / self.prm_batches
                                          if self.prm_batches else 0.0),
+            "latency_requests": len(lat),
+            "ttft_p50": percentile(ttfts, 50),
+            "ttft_p90": percentile(ttfts, 90),
+            "ttft_p99": percentile(ttfts, 99),
+            "itl_p50": percentile(gaps, 50),
+            "itl_p99": percentile(gaps, 99),
+            "queue_wait_p50": percentile(waits, 50),
+            "queue_wait_p99": percentile(waits, 99),
+            "preempt_delay_s": sum(l.preempt_delay for l in lat),
+            "step_time_p50": percentile(step_ts, 50),
+            "step_time_p99": percentile(step_ts, 99),
         }
 
 
@@ -1088,8 +1134,20 @@ class ContinuousScheduler:
     def __init__(self, engine: DecodeEngine, n_slots: int = 8,
                  prompt_len: int = 32, stop_ids: tuple = (),
                  prefix_cache: Optional[PrefixCache] = None,
-                 max_admission_batch: Optional[int] = None):
+                 max_admission_batch: Optional[int] = None,
+                 tracer: Optional[Tracer] = None):
         self.engine = engine
+        # request-lifecycle telemetry (None = default: zero overhead, no
+        # events, bit-identical scheduling).  The scheduler owns its
+        # engine's tracer slot — constructing a scheduler (re)binds it, so
+        # engine-level prefill/plan spans land in the same trace.  The
+        # tracer's injectable clock also drives the per-step wall_s
+        # measurement, keeping latency tests deterministic.
+        self.tracer = tracer
+        engine.tracer = tracer
+        self._clock = tracer.now if tracer is not None else time.perf_counter
+        self._preempted: set = set()   # req_ids awaiting re-admission
+        self._ft_emitted: set = set()  # req_ids whose first_token fired
         self.paged = engine.paged
         self.n_slots = n_slots
         self.prompt_len = prompt_len
@@ -1183,6 +1241,8 @@ class ContinuousScheduler:
         self._n_samples[req.req_id] = (req.search.width if req.search
                                        else max(1, req.n_samples))
         self.queue.append(req)
+        if self.tracer is not None:
+            self.tracer.event("enqueue", req.req_id, step=self.step_count)
 
     @staticmethod
     def _fan(req: Request) -> int:
@@ -1232,6 +1292,20 @@ class ContinuousScheduler:
             return len(free)
         return min(len(free), self.max_admission_batch)
 
+    def _trace_admit(self, req: Request, rows: list, cached_tokens: int = 0):
+        """Emit the request's admit/readmit event (readmit when it was
+        previously preempted) carrying its slot rows and, on the
+        cache-aware path, the lease width it admitted with."""
+        tr = self.tracer
+        if tr is None:
+            return
+        kind = "readmit" if req.req_id in self._preempted else "admit"
+        self._preempted.discard(req.req_id)
+        tr.event(kind, req.req_id, step=self.step_count,
+                 rows=[int(r) for r in rows],
+                 cache_hit=bool(cached_tokens),
+                 lease_tokens=int(cached_tokens))
+
     def _admit_plain(self, reqs: list, free: list) -> int:
         """One batched prefill + one merge for a run of plain requests
         (prompts share the fixed prompt_len padding)."""
@@ -1245,6 +1319,7 @@ class ContinuousScheduler:
         for req, r in zip(reqs, rows):
             self.slots[r] = _Slot(req=req, sample_idx=0,
                                   admitted_step=self.step_count)
+            self._trace_admit(req, [r])
         return sum(ln for _, ln in padded)
 
     def _admit_group(self, req: Request, free: list) -> int:
@@ -1262,6 +1337,7 @@ class ContinuousScheduler:
         for j, r in enumerate(rows):
             self.slots[r] = _Slot(req=req, sample_idx=j,
                                   admitted_step=self.step_count)
+        self._trace_admit(req, rows)
         if req.search is not None:
             self._start_beam(req, rows)
         return int(length)
@@ -1338,6 +1414,7 @@ class ContinuousScheduler:
         for j, r in enumerate(rows):
             self.slots[r] = _Slot(req=req, sample_idx=j,
                                   admitted_step=self.step_count)
+        self._trace_admit(req, rows, cached_tokens=clen)
         if req.search is not None:
             self._start_beam(req, rows)
         return len(suffix)
@@ -1432,6 +1509,7 @@ class ContinuousScheduler:
             for e, r in zip(group, rows):
                 self.slots[r] = _Slot(req=e["req"], sample_idx=0,
                                       admitted_step=self.step_count)
+                self._trace_admit(e["req"], [r], cached_tokens=e["clen"])
                 self.metrics.cache_lookups += 1
                 if e["clen"]:
                     self.metrics.cache_hits += 1
@@ -1515,8 +1593,17 @@ class ContinuousScheduler:
         done = self.completed.setdefault(slot.req.req_id, [])
         done.append(sample)
         self.metrics.completed_samples += 1
+        tr = self.tracer
+        if tr is not None:
+            tr.event("release", slot.req.req_id, step=self.step_count,
+                     rows=[int(row)], reason=reason)
         if len(done) == max(1, slot.req.n_samples):
             self.metrics.completed_requests += 1
+            if tr is not None:
+                # the request is complete: derive its latency record now,
+                # after its final release event (e2e closes on it)
+                self.metrics.latencies.append(
+                    tr.request_latency(slot.req.req_id))
         self.slots[row] = None
 
     # -- preemption (paged out-of-blocks) ------------------------------------
@@ -1550,6 +1637,12 @@ class ContinuousScheduler:
         self.metrics.completed_samples -= len(dropped)
         self.queue.appendleft(req)
         self.metrics.preemptions += 1
+        if self.tracer is not None:
+            self.tracer.event("preempt", victim, step=self.step_count,
+                              rows=[int(r) for r in rows])
+            self._preempted.add(victim)
+            # the rerun decodes its first token afresh: re-arm the event
+            self._ft_emitted.discard(victim)
 
     # -- beam-search (tree) workload -----------------------------------------
     def _row_stops(self):
@@ -1570,12 +1663,15 @@ class ContinuousScheduler:
         a lane that exhausts its step token budget without sampling the
         delimiter is *frozen* (done on device, blocks kept) so it stops
         advancing while sibling lanes finish their step."""
+        tr = self.tracer
         to_freeze: list = []
         boundaries: list = []
         for run in self._beams.values():
+            advanced = False
             for j, r in enumerate(run.rows):
                 if run.stopped[j]:
                     continue
+                advanced = True
                 run.tokens[j].append(int(toks_h[r]))
                 run.step_gen[j] += 1
                 if bool(done_h[r]):      # sampled '.'/eos this step
@@ -1583,6 +1679,8 @@ class ContinuousScheduler:
                 elif run.step_gen[j] >= run.spec.step_tokens:
                     run.stopped[j] = True
                     to_freeze.append(r)
+            if advanced and tr is not None:
+                tr.event("token", run.req.req_id, step=self.step_count)
             if all(run.stopped):
                 boundaries.append(run)
         return to_freeze, boundaries
@@ -1599,11 +1697,16 @@ class ContinuousScheduler:
         references (expansion, zero KV bytes copied) and diverge later
         via copy-on-write."""
         spec, rows = run.spec, run.rows
+        tr = self.tracer
         lp, ng = (np.asarray(a) for a in jax.device_get(
             (self.state.logprob_sum, self.state.n_gen)))
+        if tr is not None:
+            t0 = tr.now()
         scores = np.asarray(
             spec.score([list(t) for t in run.tokens], lp[rows], ng[rows]),
             np.float64).ravel()
+        if tr is not None:
+            tr.span("prm", t0, step=self.step_count, candidates=len(rows))
         self.metrics.prm_batches += 1
         self.metrics.prm_candidates += len(rows)
         # stable sort: ties keep the lowest lane index, matching the
@@ -1611,6 +1714,9 @@ class ContinuousScheduler:
         keep = np.argsort(-scores, kind="stable")[:spec.width]
         run.beam_step += 1
         self.metrics.beam_boundaries += 1
+        if tr is not None:
+            tr.event("beam_boundary", run.req.req_id, step=self.step_count,
+                     boundary=run.beam_step)
         survivors = [list(run.tokens[int(k)]) for k in keep]
         if run.beam_step >= spec.max_steps or (
                 spec.finished is not None and spec.finished(survivors)):
@@ -1627,16 +1733,25 @@ class ContinuousScheduler:
         run.step_gen = [0] * len(rows)
         run.stopped = [False] * len(rows)
         self.state = self.engine.resume_rows(self.state, rows)
+        if tr is not None:
+            tr.event("resume", run.req.req_id, step=self.step_count,
+                     rows=[int(r) for r in rows])
 
     def _finish_beam(self, run: _BeamRun, keep, survivors, lp, ng):
         """Final selection: score the ``width`` survivors, record the
         choice in ``beam_results``, emit one ``CompletedSample`` per
         survivor and release every lane's blocks."""
         spec, rows, req = run.spec, run.rows, run.req
+        tr = self.tracer
         final = spec.final_score or spec.score
         krows = [rows[int(k)] for k in keep]
+        if tr is not None:
+            t0 = tr.now()
         final_scores = np.asarray(
             final(survivors, lp[krows], ng[krows]), np.float64).ravel()
+        if tr is not None:
+            tr.span("prm", t0, step=self.step_count,
+                    candidates=len(survivors))
         self.metrics.prm_batches += 1
         self.metrics.prm_candidates += len(survivors)
         if self.cache is not None:
@@ -1662,6 +1777,10 @@ class ContinuousScheduler:
         }
         self.metrics.completed_samples += len(survivors)
         self.metrics.completed_requests += 1
+        if tr is not None:
+            tr.event("release", req.req_id, step=self.step_count,
+                     rows=[int(r) for r in rows], reason="beam")
+            self.metrics.latencies.append(tr.request_latency(req.req_id))
         for r in rows:
             self.slots[r] = None
         del self._beams[req.req_id]
@@ -1669,8 +1788,21 @@ class ContinuousScheduler:
     # -- the admit -> decode -> release cycle --------------------------------
     def step_once(self, rng, sc: SamplerConfig = SamplerConfig()) -> bool:
         """One scheduler step. Returns False when idle (nothing admitted,
-        nothing decoding)."""
+        nothing decoding).
+
+        Wall time is measured *here* (not in :meth:`run`), so callers
+        driving ``step_once`` directly — controller loops, tests — get
+        real ``wall_s``/throughput numbers: each step's host time lands
+        in ``StepRecord.wall_s`` and accumulates into
+        ``metrics.wall_s``."""
+        tr = self.tracer
+        t_wall = self._clock()
+        if tr is not None:
+            t_step = tr.now()
         admitted, prefill_tokens = self._admit()
+        if tr is not None:
+            tr.span("admit", t_step, step=self.step_count,
+                    admitted=admitted, prefill_tokens=prefill_tokens)
         live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:
             return False
@@ -1679,6 +1811,8 @@ class ContinuousScheduler:
                 self.slots[i].first_decode_step = self.step_count
         while True:
             try:
+                if tr is not None:
+                    t_dec = tr.now()
                 self.state, toks = self.engine.step(
                     self.state, rng, sc, stop_ids=self.stop_ids,
                     row_stops=self._row_stops())
@@ -1690,6 +1824,22 @@ class ContinuousScheduler:
         toks_h, done_h, lp_h, ng_h = jax.device_get(
             (toks, self.state.done, self.state.logprob_sum,
              self.state.n_gen))
+        if tr is not None:
+            # closes after the device_get sync above, so the span is the
+            # host-visible latency of this decode step
+            tr.span("decode", t_dec, step=self.step_count, batch=len(live))
+            seen: set = set()
+            for i in live:
+                rid = self.slots[i].req.req_id
+                if (self.slots[i].first_decode_step == self.step_count
+                        and rid not in self._ft_emitted):
+                    self._ft_emitted.add(rid)
+                    tr.event("first_token", rid, step=self.step_count)
+                # every live non-beam row sampled a token this step (stop
+                # tokens included); beam lanes are tracked in _beam_track
+                if self.slots[i].req.search is None and rid not in seen:
+                    seen.add(rid)
+                    tr.event("token", rid, step=self.step_count)
         released = []
         over_budget = []
         released_reqs: list[tuple] = []
@@ -1736,6 +1886,14 @@ class ContinuousScheduler:
             to_freeze, boundaries = self._beam_track(toks_h, done_h)
             if to_freeze:
                 self.state = self.engine.freeze_rows(self.state, to_freeze)
+                if tr is not None:
+                    by_req: dict = {}
+                    for r in to_freeze:
+                        by_req.setdefault(self.slots[r].req.req_id,
+                                          []).append(int(r))
+                    for rid, rs in by_req.items():
+                        tr.event("freeze", rid, step=self.step_count,
+                                 rows=rs)
             for run in boundaries:
                 self._beam_boundary(run)
         if self.paged:
@@ -1744,9 +1902,21 @@ class ContinuousScheduler:
             self.metrics.peak_kv_bytes = max(
                 self.metrics.peak_kv_bytes,
                 self.engine.pool.peak_in_use * self._block_bytes)
+        if tr is not None:
+            tr.gauge("occupancy", len(live))
+            if self.paged:
+                tr.gauge("free_blocks", self.engine.pool.free_blocks)
+                if self.cache is not None:
+                    tr.gauge("cache_pinned_blocks",
+                             self.cache.n_cached_blocks)
+        wall = self._clock() - t_wall
+        self.metrics.wall_s += wall
         self.metrics.record(StepRecord(
             step=self.step_count, occupancy=len(live), admitted=admitted,
-            prefill_tokens=prefill_tokens))
+            prefill_tokens=prefill_tokens, wall_s=wall))
+        if tr is not None:
+            tr.span("step", t_step, step=self.step_count,
+                    occupancy=len(live))
         self.step_count += 1
         return True
 
@@ -1760,14 +1930,13 @@ class ContinuousScheduler:
         Raises ``RuntimeError`` if ``max_steps`` elapses with work still
         queued or decoding (finished requests remain in ``self.completed``
         and the drain can be resumed with another ``run`` call)."""
-        t0 = time.perf_counter()
         steps = 0
         while steps < max_steps:
             rng, key = jax.random.split(rng)
+            # step_once accumulates per-step wall time into metrics.wall_s
             if not self.step_once(key, sc):
                 break
             steps += 1
-        self.metrics.wall_s += time.perf_counter() - t0
         live = sum(1 for s in self.slots if s is not None)
         if self.queue or live:
             raise RuntimeError(

@@ -69,6 +69,40 @@ def test_check_time_envelope(monkeypatch):
     assert common.check_snapshot("t", slow, snap) == []
 
 
+LAT_ROW = [("serving.latency", 2.0e6,
+            "ttft_p50_ms=12.00 ttft_p99_ms=80.00 itl_p50_ms=1.50 "
+            "itl_p99_ms=9.00 queue_wait_p99_ms=30.00 "
+            "step_time_p50_ms=2.00 step_time_p99_ms=11.00 preemptions=0")]
+
+
+def test_check_latency_envelope(monkeypatch):
+    snap = common.snapshot("t", LAT_ROW)
+    # the floor dominates small snapshots: p50 of 12ms is checked against
+    # 25x max(12, 50) = 1250ms, so CI jitter never trips it...
+    noisy = [("serving.latency", 2.0e6,
+              LAT_ROW[0][2].replace("ttft_p50_ms=12.00",
+                                    "ttft_p50_ms=1200.00"))]
+    assert common.check_snapshot("t", noisy, snap) == []
+    # ...but a stalled scheduler does
+    stalled = [("serving.latency", 2.0e6,
+                LAT_ROW[0][2].replace("ttft_p50_ms=12.00",
+                                      "ttft_p50_ms=1300.00"))]
+    bad = common.check_snapshot("t", stalled, snap)
+    assert len(bad) == 1 and "ttft_p50_ms" in bad[0] and "envelope" in bad[0]
+    # snapshots above the floor scale with the snapshot value
+    worse = [("serving.latency", 2.0e6,
+              LAT_ROW[0][2].replace("ttft_p99_ms=80.00",
+                                    "ttft_p99_ms=2100.00"))]
+    bad = common.check_snapshot("t", worse, snap)
+    assert len(bad) == 1 and "ttft_p99_ms" in bad[0]
+    # machine-dependent overrides mirror the time envelope's
+    monkeypatch.setenv("REPRO_BENCH_LAT_FACTOR", "50")
+    assert common.check_snapshot("t", worse, snap) == []
+    monkeypatch.delenv("REPRO_BENCH_LAT_FACTOR")
+    monkeypatch.setenv("REPRO_BENCH_LAT_FLOOR_MS", "100")
+    assert common.check_snapshot("t", stalled, snap) == []
+
+
 def test_committed_snapshots_are_well_formed():
     """The repo must carry the recorded perf trajectory for both areas."""
     import os
