@@ -34,6 +34,15 @@ serving.latency — tail-latency percentiles (TTFT / inter-token / queue
           lifecycle Tracer; the emitted *_ms metrics are enforced by the
           snapshot check's latency envelope and the in-memory Chrome
           trace must pass schema validation before the row emits.
+serving.profile — the paged q8 greedy workload under the roofline-
+          attributed KernelProfiler with the numerics-drift canary armed:
+          per-kernel achieved-vs-peak efficiency and the kernel-time
+          share of step wall, plus the canary's max logit error / argmax
+          flip rate / KV round-trip error.  Asserts flip rate == 0 (the
+          exact-path replica must agree bit-for-bit with greedy q8
+          production) and that the report passes schema validation; the
+          drift metrics are named ``*err*`` so the snapshot check's
+          error envelope arms against numerics rot.
 
 Standalone smoke (CI keeps the paged paths alive):
 
@@ -42,6 +51,7 @@ Standalone smoke (CI keeps the paged paths alive):
     PYTHONPATH=src python -m benchmarks.serving_scaling --kv-quant q8 --dry
     PYTHONPATH=src python -m benchmarks.serving_scaling --beam --dry
     PYTHONPATH=src python -m benchmarks.serving_scaling --latency --dry
+    PYTHONPATH=src python -m benchmarks.serving_scaling --profile --dry
 """
 from __future__ import annotations
 
@@ -534,6 +544,65 @@ def latency_serving(n_requests: int = 10, n_slots: int = 4,
          f"trace_events={len(tracer.events)}")
 
 
+def profile_serving(n_requests: int = 8, n_slots: int = 4,
+                    block_size: int = 8, dry: bool = False):
+    """serving.profile: the paged q8 greedy workload under the
+    :class:`~repro.serving.profiling.KernelProfiler`.
+
+    Every step is sampled (roofline attribution + measured wall) and a
+    quarter of steps run the exact-path canary.  Asserts before emitting:
+    the report passes ``validate_profile_report``, at least one kernel
+    was attributed, and the canary's argmax flip rate is exactly zero —
+    under greedy decoding the exact replica of the production path must
+    reproduce its logits bit-for-bit, so any flip means the canary or the
+    production path drifted.  The emitted ``canary_max_logit_err`` /
+    ``kv_roundtrip_err`` metrics carry ``err`` in the name on purpose:
+    the snapshot check's error envelope (4x over a 0.0 snapshot, i.e.
+    ~0) turns numerics rot into a ``--check`` failure."""
+    from repro.serving.profiling import KernelProfiler, validate_profile_report
+
+    if dry:
+        tok, cfg, params = _untrained_tiny()
+        n_requests = 4
+    else:
+        tok, cfg, params = trained_tiny()
+    max_len = 96
+    eng = DecodeEngine(params, cfg, max_len=max_len, eos_id=tok.eos_id,
+                       pad_id=tok.pad_id, paged=True, block_size=block_size,
+                       n_blocks=1 + n_slots * (max_len // block_size),
+                       kv_quant="q8")
+    prof = KernelProfiler(sample_rate=1.0, canary_rate=0.25)
+    sched = ContinuousScheduler(eng, n_slots=n_slots, prompt_len=24,
+                                stop_ids=(tok.eos_id,), profiler=prof)
+    tasks = T.gen_dataset(77, n_requests, reasoning=False, max_terms=2)
+    for i, task in enumerate(tasks):
+        sched.submit(Request(req_id=i,
+                             prompt=jnp.asarray(tok.encode(task.prompt)),
+                             max_new_tokens=4 + 8 * (i % 3)))
+    sched.run(jax.random.key(0), SamplerConfig(greedy=True))
+    prof.uninstall()  # later benchmark sections must not record here
+    s = sched.metrics.summary()
+    report = prof.report()
+    bad = validate_profile_report(report)
+    assert not bad, f"profile report failed schema validation: {bad[:3]}"
+    assert report["kernels"], "profiler attributed no kernel dispatches"
+    assert s["profiled_steps"] > 0 and s["canary_samples"] > 0, \
+        "profiler sampled no steps / canary never fired"
+    assert s["canary_argmax_flip_rate"] == 0.0, \
+        (f"greedy q8 canary flipped argmax on "
+         f"{report['canary']['flips']}/{report['canary']['rows']} rows")
+    top = max(report["kernels"].items(), key=lambda kv: kv[1]["bound_s"])
+    emit("serving.profile", s["wall_s"] * 1e6,
+         f"steps={s['profiled_steps']} kernels={len(report['kernels'])} "
+         f"kernel_time_share={s['kernel_time_share']:.3f} "
+         f"roofline_eff_p50={s['roofline_efficiency_p50']:.3g} "
+         f"top_kernel={top[0]} top_eff={top[1]['efficiency']:.3g} "
+         f"canary_samples={s['canary_samples']} "
+         f"canary_max_logit_err={s['canary_max_logit_err']:.3g} "
+         f"canary_flip_rate={s['canary_argmax_flip_rate']:.3g} "
+         f"kv_roundtrip_err={s['canary_kv_roundtrip_err']:.3g}")
+
+
 def dry_rows():
     """The serving snapshot area (``benchmarks.run --record/--check``):
     the three paged-engine rows in dry mode — untrained tiny model, small
@@ -545,6 +614,7 @@ def dry_rows():
     kv_quant_serving(mode="q8", dry=True)
     beam_serving(dry=True)
     latency_serving(dry=True)
+    profile_serving(dry=True)
 
 
 def run():
@@ -558,6 +628,7 @@ def run():
     kv_quant_serving()
     beam_serving()
     latency_serving()
+    profile_serving()
 
 
 if __name__ == "__main__":
@@ -576,6 +647,9 @@ if __name__ == "__main__":
     ap.add_argument("--latency", action="store_true",
                     help="run only the serving.latency section (traced "
                          "mixed workload, tail-latency percentiles)")
+    ap.add_argument("--profile", action="store_true",
+                    help="run only the serving.profile section (roofline-"
+                         "attributed kernel profiling + drift canary)")
     ap.add_argument("--dry", action="store_true",
                     help="smoke mode: untrained tiny model, small workload")
     args = ap.parse_args()
@@ -590,5 +664,7 @@ if __name__ == "__main__":
         beam_serving(dry=args.dry)
     elif args.latency:
         latency_serving(dry=args.dry)
+    elif args.profile:
+        profile_serving(dry=args.dry)
     else:
         run()

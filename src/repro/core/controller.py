@@ -103,7 +103,7 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
                     max_tokens: int, rng, scorer, n_slots: int = 8,
                     prompt_len: Optional[int] = None,
                     sc: SamplerConfig = SamplerConfig(temperature=0.8),
-                    prefix_cache=None, tracer=None):
+                    prefix_cache=None, tracer=None, profiler=None):
     """Best-of-N over a task set through the continuous-batching scheduler.
 
     Every task is one TTS request: one prefill, ``fork`` into ``n`` slots;
@@ -128,7 +128,8 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
         prompt_len = max((int(p.shape[0]) for p in prompts), default=1)
     sched = ContinuousScheduler(engine, n_slots=n_slots,
                                 prompt_len=prompt_len,
-                                prefix_cache=prefix_cache, tracer=tracer)
+                                prefix_cache=prefix_cache, tracer=tracer,
+                                profiler=profiler)
     # the pool's peak/CoW counters are lifetime values on a shared engine;
     # rebase them so this row reports its own interval, not the sweep's
     cow_base = engine.pool.reset_peak() if engine.paged else 0
@@ -190,7 +191,7 @@ def serve_beam_search(engine, tok, tasks: Sequence[T.MathTask], *,
                       max_steps: int = 8, rng, prm, n_slots: int = 8,
                       prompt_len: Optional[int] = None,
                       sc: SamplerConfig = SamplerConfig(temperature=0.8),
-                      prefix_cache=None, tracer=None):
+                      prefix_cache=None, tracer=None, profiler=None):
     """Step-level PRM beam search over a task set through the
     continuous-batching scheduler (the production counterpart of the
     direct ``core.beam_search`` path).
@@ -214,7 +215,8 @@ def serve_beam_search(engine, tok, tasks: Sequence[T.MathTask], *,
     n_slots = max(n_slots, fan)
     sched = ContinuousScheduler(engine, n_slots=n_slots,
                                 prompt_len=prompt_len,
-                                prefix_cache=prefix_cache, tracer=tracer)
+                                prefix_cache=prefix_cache, tracer=tracer,
+                                profiler=profiler)
     cow_base = engine.pool.reset_peak() if engine.paged else 0
     cache_base = prefix_cache.stats() if prefix_cache is not None else None
     dot_id = int(tok.encode(".", bos=False)[0])
@@ -259,7 +261,7 @@ def serve_beam_search(engine, tok, tasks: Sequence[T.MathTask], *,
 
 def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
           rng, scorer, *, continuous: bool = False, n_slots: int = 8,
-          prefix_cache=None, tracer=None):
+          prefix_cache=None, tracer=None, profiler=None):
     """Accuracy / decode-cost for each spec — one row per Pareto point.
 
     ``continuous=True`` runs Best-of-N and beam-search specs through the
@@ -281,7 +283,8 @@ def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
                 engine, tok, tasks, n=spec.budget,
                 max_tokens=spec.max_tokens, rng=k, scorer=scorer,
                 n_slots=max(n_slots, spec.budget),
-                prefix_cache=prefix_cache, tracer=tracer))
+                prefix_cache=prefix_cache, tracer=tracer,
+                profiler=profiler))
             continue
         if continuous and spec.method == "beam_search":
             rng, k = jax.random.split(rng)
@@ -291,7 +294,8 @@ def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
                 engine, tok, tasks, width=width, expand=expand,
                 step_tokens=spec.step_tokens, max_steps=spec.beam_steps,
                 rng=k, prm=scorer, n_slots=max(n_slots, width * expand),
-                prefix_cache=prefix_cache, tracer=tracer))
+                prefix_cache=prefix_cache, tracer=tracer,
+                profiler=profiler))
             continue
         correct = cost = 0
         for task in tasks:

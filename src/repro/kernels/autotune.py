@@ -143,9 +143,16 @@ def record(key: str, blocks: Sequence[int], us: float) -> None:
 # ---------------------------------------------------------------------------
 
 
+def roofline_bound_s(flops: float, hbm_bytes: float) -> float:
+    """Analytic lower bound on wall seconds: compute- or bandwidth-bound,
+    whichever is worse.  The profiler divides this by measured wall time
+    to get achieved-vs-peak efficiency."""
+    return max(flops / PEAK_FLOPS, hbm_bytes / HBM_BW)
+
+
 def _roofline_score(flops: float, hbm_bytes: float, grid_steps: int,
                     vmem_bytes: float) -> float:
-    t = max(flops / PEAK_FLOPS, hbm_bytes / HBM_BW)
+    t = roofline_bound_s(flops, hbm_bytes)
     t += grid_steps * GRID_STEP_OVERHEAD_S
     if vmem_bytes > VMEM_BUDGET_BYTES:
         t *= 1e3  # does not fit: effectively reject
@@ -183,6 +190,58 @@ def choose(key: str, axes: Sequence[tuple[int, int, int]],
 # ---------------------------------------------------------------------------
 # Per-kernel shape keys, constraints and cost models
 # ---------------------------------------------------------------------------
+#
+# Each ``*_cost`` function returns ``(flops, hbm_bytes)`` for one kernel
+# invocation.  Called without block sizes it gives the *ideal single-pass*
+# traffic — the roofline lower bound ``serving/profiling.KernelProfiler``
+# attributes measured wall time against; with block sizes it gives the
+# *streamed* traffic (operands re-read once per block of the other
+# operand) that the score closures below rank candidates by.  Keeping
+# both behind one function is what "single-sourced cost models" means:
+# the tuner and the profiler can never disagree about what a kernel
+# should cost.
+
+
+def gemm_cost(M: int, K: int, N: int, *, bm: int | None = None,
+              bn: int | None = None) -> tuple[float, float]:
+    """LUT-dequant GEMM: x (M,K) f32 @ 4-bit codes (K,N) -> (M,N) f32."""
+    m_rep = 1 if bm is None else M // bm
+    n_rep = 1 if bn is None else N // bn
+    # x streams once per N-block, codes once per M-block, out once
+    hbm = (M * K * 4) * n_rep + (K * N // 2) * m_rep + M * N * 4
+    return 2.0 * M * N * K, float(hbm)
+
+
+def attn_cost(BH: int, Sq: int, Skv: int, D: int, *,
+              bq: int | None = None) -> tuple[float, float]:
+    """LUT-softmax flash attention over (BH, Sq|Skv, D) fp16 operands."""
+    q_rep = 1 if bq is None else Sq // bq
+    hbm = BH * (Sq * D * 2 + 2 * Skv * D * 2 * q_rep + Sq * D * 2)
+    return 4.0 * BH * Sq * Skv * D, float(hbm)
+
+
+def paged_attn_cost(B: int, Hq: int, W: int, bs: int, D: int, *,
+                    slab_bytes: float) -> tuple[float, float]:
+    """Paged decode attention: q (B,1,Hq,D) against W blocks of bs
+    tokens per row.  ``slab_bytes`` is one token's (Hkv, D) K-slab in
+    pool storage (codes+scales for quantized pools), so the bound is
+    layout-aware: a q8 pool moves ~4x fewer KV bytes than fp32."""
+    skv = W * bs
+    hbm = B * (Hq * D * 2 + 2 * skv * slab_bytes + Hq * D * 4)
+    return 4.0 * B * Hq * skv * D, float(hbm)
+
+
+def quantize_cost(K: int, N: int) -> tuple[float, float]:
+    """Tile quantization of a (K, N) f32 weight to 4-bit codes."""
+    return 4.0 * K * N, float(K * N * 4 + K * N // 2)
+
+
+def dequant_kv_cost(R: int, H: int, D: int,
+                    mode: str) -> tuple[float, float]:
+    """vlut16 KV-slab dequant: R token slabs of (H, D) codes -> f32."""
+    slab_in = H * (D // 2 if mode == "q4" else D) + H * D // 8
+    slab_out = H * D * 4
+    return 2.0 * R * H * D, float(R * (slab_in + slab_out))
 
 
 def gemm_key(M: int, K: int, N: int, scheme: str, group_size: int) -> str:
@@ -202,10 +261,9 @@ def gemm_blocks(M: int, K: int, N: int, *, scheme: str,
     def score(bl):
         bm, bn, bk = bl
         steps = (M // bm) * (N // bn) * (K // bk)
-        # x streams once per N-block, codes once per M-block, out once
-        hbm = (M * K * 4) * (N // bn) + (K * N // 2) * (M // bm) + M * N * 4
         vmem = (bm * bk + 2 * bk * bn + 2 * bm * bn) * 4
-        return _roofline_score(2.0 * M * N * K, hbm, steps, vmem)
+        flops, hbm = gemm_cost(M, K, N, bm=bm, bn=bn)
+        return _roofline_score(flops, hbm, steps, vmem)
 
     return choose(gemm_key(M, K, N, scheme, group_size), axes, score)
 
@@ -223,9 +281,9 @@ def attn_blocks(BH: int, Sq: int, Skv: int, D: int, *, bq_target: int = 128,
     def score(bl):
         bq, bkv = bl
         steps = BH * (Sq // bq) * (Skv // bkv)
-        hbm = BH * (Sq * D * 2 + 2 * Skv * D * 2 * (Sq // bq) + Sq * D * 2)
         vmem = (bq * D + 2 * bkv * D) * 2 + bq * D * 4 + bq * bkv * 4
-        return _roofline_score(4.0 * BH * Sq * Skv * D, hbm, steps, vmem)
+        flops, hbm = attn_cost(BH, Sq, Skv, D, bq=bq)
+        return _roofline_score(flops, hbm, steps, vmem)
 
     return choose(attn_key(BH, Sq, Skv, D, bq_target, bkv_target), axes,
                   score)
@@ -242,9 +300,9 @@ def quantize_blocks(K: int, N: int) -> tuple[int, int]:
     def score(bl):
         bk, bn = bl
         steps = (K // bk) * (N // bn)
-        hbm = K * N * 4 + K * N // 2
         vmem = bk * bn * 6
-        return _roofline_score(4.0 * K * N, hbm, steps, vmem)
+        flops, hbm = quantize_cost(K, N)
+        return _roofline_score(flops, hbm, steps, vmem)
 
     return choose(quantize_key(K, N), axes, score)
 
@@ -262,8 +320,9 @@ def dequant_rows(R: int, H: int, D: int, mode: str) -> int:
     def score(bl):
         (br,) = bl
         steps = R // br
-        return _roofline_score(2.0 * R * H * D, R * (slab_in + slab_out),
-                               steps, br * (slab_in + slab_out))
+        flops, hbm = dequant_kv_cost(R, H, D, mode)
+        return _roofline_score(flops, hbm, steps,
+                               br * (slab_in + slab_out))
 
     (br,) = choose(dequant_key(R, H, D, mode), axes, score)
     return br

@@ -23,6 +23,44 @@ from repro.quant import tile_quant as TQ
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
+# Kernel-dispatch recording hook (serving/profiling.KernelProfiler).
+# ``hook(name, flops, hbm_bytes)`` fires once per wrapper call with the
+# analytic cost from ``kernels/autotune`` — for jitted callers that means
+# at *trace* time, which is exactly what the profiler wants: it caches
+# each phase's op roster at trace time and replays it on cached-
+# executable steps.  None (the default) is zero overhead.
+_OP_HOOK = None
+
+
+def set_op_hook(hook):
+    """Install the dispatch-layer cost hook; returns the previous one so
+    callers can restore it (``set_op_hook(None)`` disables)."""
+    global _OP_HOOK
+    prev, _OP_HOOK = _OP_HOOK, hook
+    return prev
+
+
+def record_op(name: str, flops: float, hbm_bytes: float) -> None:
+    """Report one op's analytic (flops, hbm_bytes) to the installed hook.
+    Public so dispatch sites outside this module — e.g. the XLA fallback
+    branch of ``layers.paged_decode_attention`` — attribute through the
+    same funnel."""
+    if _OP_HOOK is not None:
+        _OP_HOOK(name, float(flops), float(hbm_bytes))
+
+
+def pool_slab_bytes(pool_leaf) -> float:
+    """Storage bytes of one token's (Hkv, D) slab in a per-layer pool
+    leaf ``(n_blocks, bs, Hkv, D)`` — codes + scales for quantized
+    {"codes", "scales"} leaves, dtype bytes for fp arrays."""
+    if isinstance(pool_leaf, dict):
+        c, s = pool_leaf["codes"], pool_leaf["scales"]
+        return float(c.shape[-2] * c.shape[-1] * c.dtype.itemsize
+                     + s.shape[-2] * s.shape[-1] * s.dtype.itemsize)
+    return float(pool_leaf.shape[-2] * pool_leaf.shape[-1]
+                 * pool_leaf.dtype.itemsize)
+
+
 _EXP_LUT = None
 
 
@@ -61,6 +99,7 @@ def plan_lut_dequant_matmul(qw: dict, *, m: int, group_size: int = 32):
                                        group_size=group_size)
 
     def run(x):
+        record_op("lut_dequant_matmul", *_autotune.gemm_cost(m, K, N))
         return _gemm.lut_dequant_gemm(
             x, codes, scales, codebook, scheme=scheme,
             group_size=group_size, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
@@ -91,6 +130,7 @@ def flash_attention(q, k, v, *, causal: bool = True, exp_mode: str = "lut",
         B * Hq, Skv, D).astype(jnp.float16)
     bq_pick, bkv_pick = _autotune.attn_blocks(B * Hq, Sq, Skv, D,
                                               bq_target=bq, bkv_target=bkv)
+    record_op("flash_attention", *_autotune.attn_cost(B * Hq, Sq, Skv, D))
     o = _attn.lut_softmax_attention(
         qt, kt, vt, exp_lut(), causal=causal,
         bq=bq_pick, bkv=bkv_pick, interpret=INTERPRET, exp_mode=exp_mode)
@@ -117,6 +157,11 @@ def paged_flash_decode(q, k_pool, v_pool, table, cache_len, *,
     quantized = isinstance(k_pool, dict)
     Hkv = (k_pool["codes"] if quantized else k_pool).shape[2]
     G = Hq // Hkv
+    if _OP_HOOK is not None:
+        record_op("paged_flash_decode", *_autotune.paged_attn_cost(
+            B, Hq, table.shape[1],
+            (k_pool["codes"] if quantized else k_pool).shape[1], D,
+            slab_bytes=pool_slab_bytes(k_pool)))
     qg = q.reshape(B, Hkv, G, D)
     lut = exp_lut() if exp_mode == "lut" else None
     fn = _paged.quant_paged_attention if quantized else _paged.paged_attention
@@ -146,6 +191,8 @@ def lut_dequant_gather(gathered):
     lead = codes.shape[:-2]
     r = math.prod(lead) if lead else 1
     br = _autotune.dequant_rows(r, codes.shape[-2], d, mode)
+    record_op("lut_dequant_kv",
+              *_autotune.dequant_kv_cost(r, codes.shape[-2], d, mode))
     out = _gemm.lut_dequant_kv(
         codes.reshape(r, *codes.shape[-2:]),
         scales.reshape(r, *scales.shape[-2:]),
@@ -158,6 +205,7 @@ def tile_quantize_op(w, *, group_size: int = 32):
     """Kernel-quantize a (K, N) weight -> quantized leaf dict."""
     K, N = w.shape
     bk, bn = _autotune.quantize_blocks(K, N)
+    record_op("tile_quantize", *_autotune.quantize_cost(K, N))
     codes, scales = _tq.tile_quantize(
         w, group_size=group_size, bk=bk, bn=bn, interpret=INTERPRET)
     from repro.quant.codebooks import get_codebook

@@ -85,6 +85,19 @@ def main():
                          "phase spans as nested slices, pool gauges as "
                          "counters) to this path — open it at "
                          "https://ui.perfetto.dev; requires --continuous")
+    ap.add_argument("--profile", default="",
+                    help="write a roofline-attributed kernel-profile JSON "
+                         "report (per-kernel analytic FLOPs/HBM bytes vs "
+                         "sampled measured wall time, prefill/decode cost "
+                         "breakdown, canary drift gauges) to this path — "
+                         "validate with `python -m repro.serving.profiling "
+                         "PATH`; requires --continuous")
+    ap.add_argument("--canary-rate", type=float, default=0.25,
+                    help="fraction of decode steps the profiler re-runs "
+                         "through the exact path (XLA paged attention, fp "
+                         "dequant, exact softmax) to measure max logit "
+                         "error / argmax flip rate / KV round-trip drift "
+                         "online (0 disables; only active with --profile)")
     ap.add_argument("--metrics", action="store_true",
                     help="print every serving row's full "
                          "SchedulerMetrics.summary() dict (all latency "
@@ -168,6 +181,15 @@ def main():
         from repro.serving.telemetry import Tracer
 
         tracer = Tracer()
+    profiler = None
+    if args.profile:
+        if not args.continuous:
+            raise SystemExit("--profile requires --continuous (the "
+                             "profiler samples the scheduler's decode "
+                             "steps)")
+        from repro.serving.profiling import KernelProfiler
+
+        profiler = KernelProfiler(canary_rate=args.canary_rate)
     if args.fewshot:
         tasks = T.shared_prefix_dataset(123, args.tasks,
                                         n_shots=args.fewshot)
@@ -180,12 +202,26 @@ def main():
                    step_tokens=args.step_tokens)
     rows = sweep(engine, tok, tasks, [spec], jax.random.key(0), scorer,
                  continuous=args.continuous, n_slots=args.slots,
-                 prefix_cache=prefix_cache, tracer=tracer)
+                 prefix_cache=prefix_cache, tracer=tracer,
+                 profiler=profiler)
     if args.trace:
         tracer.write_chrome_trace(args.trace)
         print(f"[serve] trace: {len(tracer.events)} events / "
               f"{len(tracer.spans)} spans -> {args.trace} "
               f"(load in https://ui.perfetto.dev)")
+    if profiler is not None:
+        profiler.uninstall()
+        profiler.write_report(args.profile)
+        ps = profiler.summary_metrics()
+        print(f"[serve] profile: {len(profiler.report()['kernels'])} "
+              f"kernels, kernel_time_share={ps['kernel_time_share']:.3f} "
+              f"eff_p50={ps['roofline_efficiency_p50']:.3g} "
+              f"canary_samples={ps['canary_samples']} "
+              f"flip_rate={ps['canary_argmax_flip_rate']:.3g} "
+              f"max_logit_err={ps['canary_max_logit_err']:.3g} "
+              f"-> {args.profile}")
+        for w in profiler.warnings:
+            print(f"[serve] profile WARNING: {w}")
     if args.paged:
         # leak check: after a full drain the pool holds only the prefix
         # cache's pins — beam trees included (the pre-scheduler beam path

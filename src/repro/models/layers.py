@@ -357,6 +357,16 @@ def paged_decode_attention(
     B = q.shape[0]
     W = table.shape[1]
     bs = pool_block_size(k_pool)
+    from repro.kernels import ops as _kops
+
+    # attribute the gather+attend fallback through the same dispatch-hook
+    # funnel as the kernels (the kernel branches above record inside
+    # paged_flash_decode, so each call is counted exactly once)
+    from repro.kernels import autotune as _autotune
+
+    _kops.record_op("paged_attention_xla", *_autotune.paged_attn_cost(
+        B, q.shape[2], W, bs, q.shape[3],
+        slab_bytes=_kops.pool_slab_bytes(k_pool)))
 
     def gather(pool):
         seq = jax.tree.map(

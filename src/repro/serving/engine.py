@@ -96,6 +96,7 @@ from repro.distributed.sharding import ParallelContext
 from repro.models import api
 from repro.serving.kv_pool import KVPool, OutOfBlocks, blocks_for
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.profiling import NULL_PROFILE_METRICS
 from repro.serving.sampler import SamplerConfig, logprobs_of, sample
 from repro.serving.telemetry import RequestLatency, Tracer, percentile
 
@@ -147,6 +148,15 @@ class DecodeEngine:
         # by ContinuousScheduler(tracer=...).  None = zero overhead: every
         # touchpoint is behind an `is not None` guard.
         self.tracer: Optional[Tracer] = None
+        # roofline/canary profiler (repro.serving.profiling.
+        # KernelProfiler); installed by ContinuousScheduler(profiler=...)
+        # under the same `is not None` zero-overhead discipline.  The
+        # canary jit is built lazily on the first canary step (traced
+        # under the exact "xla" paged-attention impl, whatever the
+        # production impl is).
+        self.profiler = None
+        self._canary_jit = None
+        self.last_canary_logits = None
         if kv_quant != "none" and not paged:
             raise ValueError("kv_quant requires the paged KV layout "
                              "(DecodeEngine(paged=True))")
@@ -289,6 +299,8 @@ class DecodeEngine:
             lengths = jnp.full((B,), S, jnp.int32)
         tr = self.tracer
         t0 = tr.now() if tr is not None else 0.0
+        prof = self.profiler
+        pt0 = prof.phase_begin("prefill") if prof is not None else 0.0
         if cached_table is not None:
             if not self.paged:
                 raise ValueError(
@@ -313,6 +325,10 @@ class DecodeEngine:
                 logprob_sum=jnp.zeros((B,), jnp.float32),
                 n_gen=jnp.zeros((B,), jnp.int32),
             )
+        if prof is not None:
+            # sampled: blocks on the new state's logits so the wall spans
+            # the device work this prefill dispatched
+            prof.phase_end("prefill", pt0, outputs=st.pending_logits)
         if tr is not None:
             tr.span("prefill", t0, batch=int(B),
                     cached=cached_table is not None)
@@ -713,7 +729,7 @@ class DecodeEngine:
         return st, tok, cache["k"], cache["v"]
 
     def step(self, state: GenState, rng, sc: SamplerConfig = SamplerConfig(),
-             stop_ids: tuple = (), row_stops=None):
+             stop_ids: tuple = (), row_stops=None, canary: bool = False):
         """One decode step. Returns (new_state, sampled tokens (B,)).
 
         ``row_stops`` (B,) int32 adds one *per-row* stop id on top of the
@@ -723,7 +739,16 @@ class DecodeEngine:
 
         Paged: runs :meth:`prepare_decode` first (may raise
         :class:`OutOfBlocks`), then scatters this step's KV into pool
-        blocks in place."""
+        blocks in place.
+
+        ``canary=True`` (paged only) additionally re-runs the step
+        through the *exact* path — XLA paged attention, reference fp
+        dequant, exact softmax — on the same post-plan state and
+        pre-step pool (no donation), stashing the resulting logits in
+        :attr:`last_canary_logits` for the scheduler's drift comparison.
+        Under the default "xla" impl the exact path is the production
+        path, so the comparison must be exact."""
+        prof = self.profiler
         if self.paged:
             tr = self.tracer
             if tr is not None:
@@ -732,13 +757,95 @@ class DecodeEngine:
                 tr.span("plan", t0)  # CoW/alloc host planning
             else:
                 state = self.prepare_decode(state)
+            if canary:
+                self.last_canary_logits = self._canary_step(
+                    state, rng, row_stops, sc, tuple(stop_ids))
+            pt0 = prof.phase_begin("decode") if prof is not None else 0.0
             st, tok, pk, pv = self._step_paged_jit(
                 self.params, state, self.pool.k, self.pool.v, rng,
                 row_stops, sc=sc, stop_ids=tuple(stop_ids))
+            if prof is not None:
+                prof.phase_end("decode", pt0,
+                               outputs=(tok, st.pending_logits))
             self.pool.adopt(pk, pv)
             return st, tok
-        return self._step_jit(self.params, state, rng, row_stops, sc=sc,
-                              stop_ids=tuple(stop_ids))
+        pt0 = prof.phase_begin("decode") if prof is not None else 0.0
+        st, tok = self._step_jit(self.params, state, rng, row_stops, sc=sc,
+                                 stop_ids=tuple(stop_ids))
+        if prof is not None:
+            prof.phase_end("decode", pt0, outputs=(tok, st.pending_logits))
+        return st, tok
+
+    def _canary_step(self, state: GenState, rng, row_stops, sc, stop_ids):
+        """Exact-path replica of the paged decode step (no donation, no
+        state commit): a dedicated jit of :meth:`_step_paged_impl` traced
+        with the paged-attention impl forced to "xla" — table gather +
+        reference ``dequantize_for_pool`` + exact f32 softmax — so its
+        logits are the drift-free reference for whatever approximated
+        path production runs.  The impl switch is trace-time-only state
+        (``layers._PAGED_ATTN_IMPL`` is read when the jit traces), so it
+        is set around every call and restored in ``finally``."""
+        from repro.models import layers
+
+        from repro.kernels import ops as _kops
+
+        if self._canary_jit is None:
+            impl = self._step_paged_impl
+
+            # Distinct wrapper function, not ``jax.jit(impl)`` again: jax
+            # caches the traced jaxpr per underlying callable, so jitting
+            # the same bound method twice would let whichever jit runs
+            # first (the canary, on step 0) satisfy the other's trace from
+            # cache — and the production trace would never fire the op
+            # hook inside the profiler's "decode" phase.
+            def _canary_impl(params, state, pool_k, pool_v, rng,
+                             row_stops=None, *, sc, stop_ids=()):
+                return impl(params, state, pool_k, pool_v, rng, row_stops,
+                            sc=sc, stop_ids=stop_ids)
+
+            self._canary_jit = jax.jit(_canary_impl,
+                                       static_argnames=("sc", "stop_ids"))
+        prev = layers.set_paged_attention_impl("xla")
+        # Canary work is verification overhead, not production compute —
+        # mute the dispatch hook so its trace doesn't pollute attribution.
+        prev_hook = _kops.set_op_hook(None)
+        try:
+            st, _tok, _pk, _pv = self._canary_jit(
+                self.params, state, self.pool.k, self.pool.v, rng,
+                row_stops, sc=sc, stop_ids=stop_ids)
+        finally:
+            _kops.set_op_hook(prev_hook)
+            layers.set_paged_attention_impl(prev)
+        return st.pending_logits
+
+    def kv_roundtrip_error(self, max_blocks: int = 4):
+        """Per-layer KV quantization round-trip error over a sample of
+        live pool blocks: ``max |dequant(quant(dequant(pool))) -
+        dequant(pool)|`` per layer, K and V leaves combined.  A stable
+        quantizer round-trips its own output exactly (error 0.0); drift
+        here means the stored codes sit on decision boundaries the
+        re-quantization resolves differently — the online proxy for §5.1
+        drift when no fp reference exists.  Returns None on fp pools."""
+        from repro.serving.kv_quant import (dequantize_kv, kv_geometry,
+                                            quantize_kv)
+
+        pool = self.pool
+        if pool is None or not isinstance(pool.k, dict):
+            return None
+        live = np.nonzero(pool.refcount > 0)[0][:max_blocks]
+        if live.size == 0:
+            return None
+        per_layer = None
+        for leaf in (pool.k, pool.v):
+            sub = jax.tree.map(lambda a: a[:, live], leaf)
+            mode, gr, gc, _ = kv_geometry(sub)
+            x = dequantize_kv(sub)
+            x2 = dequantize_kv(quantize_kv(x, mode=mode, gr=gr, gc=gc))
+            err = jnp.max(jnp.abs(x2 - x),
+                          axis=tuple(range(1, x.ndim)))  # (L,)
+            per_layer = err if per_layer is None \
+                else jnp.maximum(per_layer, err)
+        return [float(e) for e in jax.device_get(per_layer)]
 
     def _generate_impl(self, params, state: GenState, rng, *, n_steps: int,
                        sc: SamplerConfig, stop_ids: tuple = ()):
@@ -968,6 +1075,12 @@ class SchedulerMetrics:
         # report 0.0); step_time_* comes from StepRecord.wall_s and needs
         # no tracer.
         self.latencies: list[RequestLatency] = []
+        # roofline/canary profiler (profiling.KernelProfiler) bound by
+        # ContinuousScheduler(profiler=...); summary() merges its
+        # kernel_time_share / roofline_efficiency / canary drift keys
+        # (all 0.0 when no profiler is attached, so the key set is
+        # stable either way)
+        self.profiler = None
 
     def record(self, rec: StepRecord):
         self.records.append(rec)
@@ -1044,6 +1157,9 @@ class SchedulerMetrics:
             "preempt_delay_s": sum(l.preempt_delay for l in lat),
             "step_time_p50": percentile(step_ts, 50),
             "step_time_p99": percentile(step_ts, 99),
+            **(self.profiler.summary_metrics()
+               if self.profiler is not None
+               else dict(NULL_PROFILE_METRICS)),
         }
 
 
@@ -1135,7 +1251,8 @@ class ContinuousScheduler:
                  prompt_len: int = 32, stop_ids: tuple = (),
                  prefix_cache: Optional[PrefixCache] = None,
                  max_admission_batch: Optional[int] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 profiler=None):
         self.engine = engine
         # request-lifecycle telemetry (None = default: zero overhead, no
         # events, bit-identical scheduling).  The scheduler owns its
@@ -1145,7 +1262,19 @@ class ContinuousScheduler:
         # measurement, keeping latency tests deterministic.
         self.tracer = tracer
         engine.tracer = tracer
-        self._clock = tracer.now if tracer is not None else time.perf_counter
+        # roofline/canary profiler (profiling.KernelProfiler), same
+        # ownership discipline as the tracer: constructing a scheduler
+        # (re)binds the engine's profiler slot and installs the kernel
+        # dispatch hook.  None = zero overhead, bit-identical outputs.
+        # The step-wall clock prefers the tracer's, then the profiler's
+        # (both injectable), so profiled runs are clock-deterministic.
+        self._clock = (tracer.now if tracer is not None
+                       else profiler.now if profiler is not None
+                       else time.perf_counter)
+        self.profiler = profiler
+        engine.profiler = profiler
+        if profiler is not None:
+            profiler.install()
         self._preempted: set = set()   # req_ids awaiting re-admission
         self._ft_emitted: set = set()  # req_ids whose first_token fired
         self.paged = engine.paged
@@ -1175,6 +1304,7 @@ class ContinuousScheduler:
         self._beams: dict[int, _BeamRun] = {}   # req_id -> in-flight tree
         self.beam_results: dict[int, dict] = {}  # req_id -> final selection
         self.metrics = SchedulerMetrics(n_slots)
+        self.metrics.profiler = profiler
         if self.paged:
             # bytes, not blocks-equivalent: quantized pools have smaller
             # blocks, and this is the number a byte-budgeted operator sizes
@@ -1786,6 +1916,32 @@ class ContinuousScheduler:
         del self._beams[req.req_id]
 
     # -- the admit -> decode -> release cycle --------------------------------
+    def _record_canary(self, live: list) -> None:
+        """Drift comparison for a canary step: the production step's new
+        logits vs the engine's exact-path logits, over the live rows.
+        Frozen/done rows carry identically-frozen pending logits in both
+        paths, so every live row is comparable.  Under the default "xla"
+        paged-attention impl the two jits compile the same HLO and the
+        comparison must be exact (flip rate 0 — the CI row asserts it);
+        under kernel/kernel_lut impls this measures the fused kernels'
+        LUT-softmax/dequant drift online."""
+        prof = self.profiler
+        exact = self.engine.last_canary_logits
+        self.engine.last_canary_logits = None
+        ex, pr = jax.device_get((exact, self.state.pending_logits))
+        rows = np.asarray(live, np.int64)
+        ex = np.asarray(ex)[rows]
+        pr = np.asarray(pr)[rows]
+        max_err = float(np.max(np.abs(ex - pr))) if rows.size else 0.0
+        flips = (int(np.sum(np.argmax(ex, -1) != np.argmax(pr, -1)))
+                 if rows.size else 0)
+        prof.record_canary(
+            max_logit_err=max_err, flips=flips, rows=int(rows.size),
+            kv_err_per_layer=self.engine.kv_roundtrip_error())
+        if self.tracer is not None:
+            self.tracer.gauge("canary_max_logit_err", max_err)
+            self.tracer.gauge("canary_flips", flips)
+
     def step_once(self, rng, sc: SamplerConfig = SamplerConfig()) -> bool:
         """One scheduler step. Returns False when idle (nothing admitted,
         nothing decoding).
@@ -1796,9 +1952,12 @@ class ContinuousScheduler:
         in ``StepRecord.wall_s`` and accumulates into
         ``metrics.wall_s``."""
         tr = self.tracer
+        prof = self.profiler
         t_wall = self._clock()
         if tr is not None:
             t_step = tr.now()
+        if prof is not None:
+            prof.begin_step()
         admitted, prefill_tokens = self._admit()
         if tr is not None:
             tr.span("admit", t_step, step=self.step_count,
@@ -1809,18 +1968,21 @@ class ContinuousScheduler:
         for i in live:
             if self.slots[i].first_decode_step < 0:
                 self.slots[i].first_decode_step = self.step_count
+        canary = (prof is not None and self.paged and prof.want_canary())
         while True:
             try:
                 if tr is not None:
                     t_dec = tr.now()
                 self.state, toks = self.engine.step(
                     self.state, rng, sc, stop_ids=self.stop_ids,
-                    row_stops=self._row_stops())
+                    row_stops=self._row_stops(), canary=canary)
                 break
             except OutOfBlocks:
                 # atomic: the failed prepare touched neither pool nor state
                 self._preempt_youngest()
                 live = [i for i, s in enumerate(self.slots) if s is not None]
+        if canary and self.engine.last_canary_logits is not None:
+            self._record_canary(live)
         toks_h, done_h, lp_h, ng_h = jax.device_get(
             (toks, self.state.done, self.state.logprob_sum,
              self.state.n_gen))
@@ -1906,10 +2068,25 @@ class ContinuousScheduler:
             tr.gauge("occupancy", len(live))
             if self.paged:
                 tr.gauge("free_blocks", self.engine.pool.free_blocks)
+                # device-memory watermark: the storage this pool physically
+                # backs vs the bytes its live blocks actually hold — the
+                # counter-track pair that shows memory pressure alongside
+                # occupancy in Perfetto
+                tr.gauge("pool_reserved_bytes",
+                         self.engine.pool.n_blocks * self._block_bytes)
+                tr.gauge("kv_bytes_in_use",
+                         self.engine.pool.blocks_in_use * self._block_bytes)
                 if self.cache is not None:
                     tr.gauge("cache_pinned_blocks",
                              self.cache.n_cached_blocks)
         wall = self._clock() - t_wall
+        if prof is not None:
+            prof.end_step(wall)
+            if tr is not None:
+                # attributed device cost as counter tracks, so host spans
+                # and kernel time line up on one Perfetto timeline
+                for k, v in prof.last_step_gauges.items():
+                    tr.gauge(k, v)
         self.metrics.wall_s += wall
         self.metrics.record(StepRecord(
             step=self.step_count, occupancy=len(live), admitted=admitted,

@@ -1,0 +1,294 @@
+"""KernelProfiler tests: deterministic sampling/attribution under an
+injected clock, trace-time roster caching and replay, null-profiler
+parity (profiler=None must be bit-identical to pre-profiler behavior,
+mirroring tests/test_telemetry.py's null-tracer contract), the greedy-q8
+canary's zero-drift guarantee, and report schema validation + CLI."""
+import itertools
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops
+from repro.serving.engine import ContinuousScheduler, DecodeEngine, Request
+from repro.serving.profiling import (NULL_PROFILE_METRICS, SCHEMA,
+                                     KernelProfiler, _interval, main,
+                                     validate_profile_report)
+from repro.serving.sampler import SamplerConfig
+
+NO_STOP = (9999,)
+GREEDY = SamplerConfig(greedy=True)
+
+
+def _counting_clock(tick_s=1e-3):
+    c = itertools.count()
+    return lambda: next(c) * tick_s
+
+
+def _paged_engine(params, cfg, tok, kv_quant="q8"):
+    return DecodeEngine(params, cfg, max_len=64, eos_id=tok.eos_id,
+                        pad_id=tok.pad_id, paged=True, block_size=8,
+                        n_blocks=33, kv_quant=kv_quant)
+
+
+_REQS = [("Q:2+7=?A:", 6), ("Q:1+1=?A:", 3), ("Q:9+9=?A:", 5)]
+
+
+def _run(engine, tok, profiler):
+    sched = ContinuousScheduler(engine, n_slots=2, prompt_len=16,
+                                stop_ids=NO_STOP, profiler=profiler)
+    for i, (text, max_new) in enumerate(_REQS):
+        sched.submit(Request(req_id=i,
+                             prompt=jnp.asarray(tok.encode(text)),
+                             max_new_tokens=max_new))
+    try:
+        res = sched.run(jax.random.key(0), GREEDY)
+    finally:
+        if profiler is not None:
+            profiler.uninstall()
+    return res, sched
+
+
+# ---------------------------------------------------------------------------
+# Unit tests (no scheduler)
+# ---------------------------------------------------------------------------
+
+
+def test_interval_schedule():
+    assert _interval(0.0) == 0 and _interval(-1.0) == 0
+    assert _interval(1.0) == 1
+    assert _interval(0.25) == 4
+    assert _interval(1.0 / 3.0) == 3
+    assert _interval(5.0) == 1  # rates clamp to "every step"
+
+
+def test_roster_replay_and_wall_attribution():
+    """The op hook fires at trace time only; later phase_end calls with
+    an empty trace buffer must replay the cached roster, and sampled
+    phase walls (injected clock) attribute across ops by bound share."""
+    prof = KernelProfiler(sample_rate=1.0, clock=_counting_clock())
+    prof.begin_step()
+    t0 = prof.phase_begin("decode")
+    prof.record_op("flash_attention", 1e6, 1e3)   # "traces" on call 1
+    prof.phase_end("decode", t0, outputs=jnp.zeros(()))
+    prof.end_step(1.0)
+    for _ in range(2):  # cached-executable calls: no hook, roster replays
+        prof.begin_step()
+        t0 = prof.phase_begin("decode")
+        prof.phase_end("decode", t0, outputs=jnp.zeros(()))
+        prof.end_step(1.0)
+    rep = prof.report()
+    op = rep["kernels"]["flash_attention"]
+    assert op["calls"] == 3
+    assert op["flops"] == pytest.approx(3e6)
+    assert rep["phases"]["decode"]["calls"] == 3
+    assert rep["phases"]["decode"]["sampled"] == 3
+    # the single op gets the whole sampled wall
+    assert op["wall_s"] == pytest.approx(rep["phases"]["decode"]["wall_s"])
+    assert op["efficiency"] > 0
+    assert rep["breakdown"] == {"softmax": pytest.approx(1.0)}
+    assert validate_profile_report(rep) == []
+
+
+def test_sampling_interval_respected():
+    """sample_rate=0.5 -> every 2nd step blocks and records a wall; the
+    analytic totals still cover every step."""
+    prof = KernelProfiler(sample_rate=0.5, clock=_counting_clock())
+    for step in range(4):
+        prof.begin_step()
+        t0 = prof.phase_begin("decode")
+        if step == 0:
+            prof.record_op("flash_attention", 1e6, 1e3)
+        prof.phase_end("decode", t0, outputs=jnp.zeros(()))
+        prof.end_step(1.0)
+    rep = prof.report()
+    assert rep["steps"] == 4 and rep["sampled_steps"] == 2
+    assert rep["phases"]["decode"]["sampled"] == 2
+    assert rep["kernels"]["flash_attention"]["calls"] == 4
+    s = prof.summary_metrics()
+    assert s["profiled_steps"] == 2
+
+
+def test_ops_outside_phase_land_untimed():
+    prof = KernelProfiler(clock=_counting_clock())
+    prof.record_op("tile_quantize", 1e6, 1e3)
+    rep = prof.report()
+    assert rep["kernels"]["tile_quantize"]["calls"] == 1
+    assert rep["phases"]["untimed"]["bound_s"] > 0
+    assert validate_profile_report(rep) == []
+
+
+def test_canary_thresholds_warn():
+    prof = KernelProfiler(canary_rate=1.0, clock=_counting_clock(),
+                          logit_err_warn=0.05, flip_rate_warn=0.01,
+                          kv_err_warn=0.25)
+    prof.record_canary(max_logit_err=0.2, flips=3, rows=4,
+                       kv_err_per_layer=[0.1, 0.5])
+    assert any("logit error" in w for w in prof.warnings)
+    assert any("flip rate" in w for w in prof.warnings)
+    assert any("round-trip" in w for w in prof.warnings)
+    s = prof.summary_metrics()
+    assert s["canary_max_logit_err"] == pytest.approx(0.2)
+    assert s["canary_argmax_flip_rate"] == pytest.approx(0.75)
+    assert s["canary_kv_roundtrip_err"] == pytest.approx(0.5)
+    rep = prof.report()
+    assert rep["canary"]["warnings"] == prof.warnings
+    assert validate_profile_report(rep) == []
+
+
+def test_install_uninstall_restores_previous_hook():
+    seen = []
+    prev = ops.set_op_hook(lambda *a: seen.append(a))
+    try:
+        prof = KernelProfiler()
+        prof.install()
+        ops.record_op("flash_attention", 1.0, 1.0)
+        assert prof._ops and not seen  # profiler intercepts
+        prof.uninstall()
+        ops.record_op("flash_attention", 1.0, 1.0)
+        assert len(seen) == 1  # previous hook restored
+    finally:
+        ops.set_op_hook(prev)
+
+
+# ---------------------------------------------------------------------------
+# Report schema validation + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_validator_negative_cases():
+    assert validate_profile_report([]) != []
+    assert any("schema" in b for b in validate_profile_report({}))
+    rep = KernelProfiler(clock=_counting_clock()).report()
+    assert validate_profile_report(rep) == []
+    assert rep["schema"] == SCHEMA
+    bad = dict(rep)
+    del bad["canary"]
+    assert any("missing top-level" in b for b in validate_profile_report(bad))
+    bad = json.loads(json.dumps(rep))
+    bad["kernels"]["x"] = {"calls": 1}
+    assert any("kernel x" in b for b in validate_profile_report(bad))
+    bad = json.loads(json.dumps(rep))
+    bad["breakdown"] = {"softmax": 0.9, "dequant": 0.9}
+    assert any("sum" in b for b in validate_profile_report(bad))
+    bad = json.loads(json.dumps(rep))
+    bad["summary"]["kernel_time_share"] = "high"
+    assert any("kernel_time_share" in b for b in validate_profile_report(bad))
+    bad = json.loads(json.dumps(rep))
+    bad["canary"]["kv_roundtrip_err_per_layer"] = ["broken"]
+    assert any("kv_roundtrip" in b for b in validate_profile_report(bad))
+
+
+def test_write_report_and_cli(tmp_path, capsys):
+    prof = KernelProfiler(clock=_counting_clock())
+    prof.begin_step()
+    t0 = prof.phase_begin("decode")
+    prof.record_op("flash_attention", 1e6, 1e3)
+    prof.phase_end("decode", t0, outputs=jnp.zeros(()))
+    prof.end_step(1.0)
+    path = str(tmp_path / "profile.json")
+    prof.write_report(path)
+    assert validate_profile_report(json.load(open(path))) == []
+    assert main([path]) == 0
+    assert "OK" in capsys.readouterr().out
+    bad_path = str(tmp_path / "bad.json")
+    json.dump({"schema": "nope"}, open(bad_path, "w"))
+    assert main([bad_path]) == 1
+    assert main([str(tmp_path / "missing.json")]) == 1
+    assert main([]) == 2
+
+
+def test_write_report_refuses_invalid(tmp_path, monkeypatch):
+    prof = KernelProfiler(clock=_counting_clock())
+    monkeypatch.setattr(prof, "report",
+                        lambda: {"schema": "wrong"})
+    with pytest.raises(ValueError, match="refusing"):
+        prof.write_report(str(tmp_path / "never.json"))
+    assert not (tmp_path / "never.json").exists()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler integration
+# ---------------------------------------------------------------------------
+
+
+def test_null_profiler_bit_parity(trained_tiny, tiny_cfg, tok):
+    """profiler=None (the default) must change nothing: bit-identical
+    outputs vs a profiled-with-canary run, and summary() carries exactly
+    the NULL_PROFILE_METRICS zeros (the stable-key-set contract) — the
+    same shape of guarantee test_telemetry.py pins for tracer=None."""
+    res_off, sched_off = _run(
+        _paged_engine(trained_tiny, tiny_cfg, tok), tok, None)
+    prof = KernelProfiler(sample_rate=1.0, canary_rate=0.5)
+    res_on, sched_on = _run(
+        _paged_engine(trained_tiny, tiny_cfg, tok), tok, prof)
+    assert res_off == res_on, \
+        "profiling changed scheduler outputs (parity violation)"
+    s_off = sched_off.metrics.summary()
+    for k, v in NULL_PROFILE_METRICS.items():
+        assert s_off[k] == v, f"null summary key {k} != {v}"
+    s_on = sched_on.metrics.summary()
+    assert s_on["profiled_steps"] > 0
+    assert s_on["canary_samples"] > 0
+    assert set(NULL_PROFILE_METRICS) <= set(s_on)
+
+
+def test_profiled_run_deterministic_under_injected_clock(trained_tiny,
+                                                         tiny_cfg, tok):
+    """Two profiled runs on fresh engines under identical fake clocks
+    produce byte-identical reports — every wall, efficiency and canary
+    gauge derives from the injected clock and the deterministic
+    every-Nth-step schedules, never the host wall clock."""
+    reps = []
+    for _ in range(2):
+        prof = KernelProfiler(sample_rate=0.5, canary_rate=0.5,
+                              clock=_counting_clock())
+        _run(_paged_engine(trained_tiny, tiny_cfg, tok), tok, prof)
+        reps.append(prof.report())
+    assert json.dumps(reps[0], sort_keys=True) == \
+        json.dumps(reps[1], sort_keys=True)
+    assert validate_profile_report(reps[0]) == []
+    assert reps[0]["sampled_steps"] > 0
+    assert reps[0]["kernels"], "no kernels attributed"
+
+
+def test_canary_zero_drift_under_greedy_q8(trained_tiny, tiny_cfg, tok):
+    """Under the default XLA paged-attention impl the canary's exact
+    path IS the production path, so greedy q8 decode must show zero
+    argmax flips and zero logit error; the KV round-trip gauge covers
+    every layer."""
+    prof = KernelProfiler(sample_rate=1.0, canary_rate=1.0)
+    _, sched = _run(_paged_engine(trained_tiny, tiny_cfg, tok), tok, prof)
+    rep = prof.report()
+    assert rep["canary"]["samples"] > 0 and rep["canary"]["rows"] > 0
+    assert rep["canary"]["flips"] == 0
+    assert rep["canary"]["max_logit_err"] == 0.0
+    assert rep["canary"]["warnings"] == []
+    errs = rep["canary"]["kv_roundtrip_err_per_layer"]
+    assert len(errs) == tiny_cfg.n_layers
+    assert all(e >= 0.0 for e in errs)
+    s = sched.metrics.summary()
+    assert s["canary_argmax_flip_rate"] == 0.0
+    assert s["canary_max_logit_err"] == 0.0
+    # attribution ran alongside: the decode phase carries an op roster
+    assert rep["phases"]["decode"]["bound_s"] > 0
+    assert any(op["calls"] > 0 for op in rep["kernels"].values())
+
+
+def test_profiler_attributes_decode_kernels(trained_tiny, tiny_cfg, tok):
+    """A fully-sampled paged run attributes the paged-attention dispatch
+    with nonzero analytic cost, measured wall and efficiency, and the
+    scheduler summary's kernel_time_share lands in (0, 1]."""
+    prof = KernelProfiler(sample_rate=1.0, canary_rate=0.0)
+    _, sched = _run(_paged_engine(trained_tiny, tiny_cfg, tok), tok, prof)
+    rep = prof.report()
+    assert "paged_attention_xla" in rep["kernels"]
+    op = rep["kernels"]["paged_attention_xla"]
+    assert op["calls"] > 0 and op["flops"] > 0 and op["hbm_bytes"] > 0
+    assert op["wall_s"] > 0 and op["efficiency"] > 0
+    assert op["category"] == "softmax"
+    s = sched.metrics.summary()
+    assert 0.0 < s["kernel_time_share"] <= 1.0
+    assert s["roofline_efficiency_p50"] > 0
+    assert abs(sum(rep["breakdown"].values()) - 1.0) < 1e-6
