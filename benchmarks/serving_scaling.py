@@ -34,6 +34,14 @@ serving.latency — tail-latency percentiles (TTFT / inter-token / queue
           lifecycle Tracer; the emitted *_ms metrics are enforced by the
           snapshot check's latency envelope and the in-memory Chrome
           trace must pass schema validation before the row emits.
+serving.speculative — the paged mixed workload decoded draft-then-verify
+          (self-drafting, k=4) against the plain greedy runs on fp AND q8
+          pools: greedy outputs must be bit-identical on both, the pool
+          leak-free after every run, and the acceptance counters live
+          (`spec_acceptance_rate` > 0, `accepted_tokens_per_step` > 1).
+          The emitted ``spec_accept_reduction`` percentage (accepted /
+          drafted) rides the snapshot check's reduction envelope, so an
+          acceptance regression > 5 points fails ``--check``.
 serving.profile — the paged q8 greedy workload under the roofline-
           attributed KernelProfiler with the numerics-drift canary armed:
           per-kernel achieved-vs-peak efficiency and the kernel-time
@@ -52,6 +60,7 @@ Standalone smoke (CI keeps the paged paths alive):
     PYTHONPATH=src python -m benchmarks.serving_scaling --beam --dry
     PYTHONPATH=src python -m benchmarks.serving_scaling --latency --dry
     PYTHONPATH=src python -m benchmarks.serving_scaling --profile --dry
+    PYTHONPATH=src python -m benchmarks.serving_scaling --speculative --dry
 """
 from __future__ import annotations
 
@@ -66,7 +75,7 @@ from repro.core.best_of_n import best_of_n
 from repro.core.self_consistency import self_consistency
 from repro.data import tasks as T
 from repro.serving.engine import (BeamSpec, ContinuousScheduler, DecodeEngine,
-                                  Request)
+                                  Request, SpecConfig)
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import SamplerConfig
 from repro.serving.telemetry import Tracer, validate_chrome_trace
@@ -603,6 +612,75 @@ def profile_serving(n_requests: int = 8, n_slots: int = 4,
          f"kv_roundtrip_err={s['canary_kv_roundtrip_err']:.3g}")
 
 
+def speculative_serving(n_requests: int = 10, n_slots: int = 4,
+                        block_size: int = 8, dry: bool = False):
+    """serving.speculative: the paged mixed workload (chat + one Best-of-N
+    group) decoded draft-then-verify against the plain greedy baseline.
+
+    Self-drafting with k=4: each round the engine snapshots the eligible
+    rows (a refcount bump per block — PR-2 fork semantics), drafts k-1
+    tokens on the snapshot, releases it, and verifies all proposals in ONE
+    batched target forward; the longest agreeing prefix commits.  Asserts
+    the tentpole contract before emitting: greedy outputs bit-identical to
+    the non-speculative run on BOTH the fp and q8 pools, zero leaked
+    blocks after every run, ``spec_acceptance_rate`` > 0 and
+    ``accepted_tokens_per_step`` > 1.  ``spec_accept_reduction`` (the
+    acceptance rate as a percentage) is named for the snapshot check's
+    reduction envelope: acceptance regressing more than 5 points below
+    the recorded snapshot fails ``--check``."""
+    if dry:
+        tok, cfg, params = _untrained_tiny()
+        n_requests = 4
+    else:
+        tok, cfg, params = trained_tiny()
+    max_len = 96
+    tasks = T.gen_dataset(77, n_requests, reasoning=False, max_terms=2)
+    spec = SpecConfig(k=4, self_draft=True)
+
+    def run_once(spec_cfg, kv_quant):
+        eng = DecodeEngine(params, cfg, max_len=max_len, eos_id=tok.eos_id,
+                           pad_id=tok.pad_id, paged=True,
+                           block_size=block_size,
+                           n_blocks=1 + (n_slots + 2) * (max_len // block_size),
+                           kv_quant=kv_quant)
+        sched = ContinuousScheduler(eng, n_slots=n_slots, prompt_len=24,
+                                    stop_ids=(tok.eos_id,), spec=spec_cfg)
+        for i, task in enumerate(tasks):
+            sched.submit(Request(req_id=i,
+                                 prompt=jnp.asarray(tok.encode(task.prompt)),
+                                 max_new_tokens=4 + 8 * (i % 3)))
+        # a Best-of-N group rides along: spec rounds must coexist with
+        # forked TTS lanes, not just plain chat traffic
+        sched.submit(Request(req_id=n_requests,
+                             prompt=jnp.asarray(tok.encode(tasks[0].prompt)),
+                             max_new_tokens=8, n_samples=2))
+        res = sched.run(jax.random.key(0), SamplerConfig(greedy=True))
+        assert eng.pool.blocks_in_use == 0, \
+            "speculative run leaked pool blocks"
+        return res, sched.metrics.summary()
+
+    s = base = None
+    for kv_quant in ("none", "q8"):
+        res_base, base = run_once(None, kv_quant)
+        res_spec, s = run_once(spec, kv_quant)
+        assert res_base == res_spec, \
+            (f"speculative greedy diverged from the plain path on the "
+             f"{kv_quant} pool (parity violation)")
+    assert s["spec_acceptance_rate"] > 0, "no drafted token was accepted"
+    assert s["accepted_tokens_per_step"] > 1, \
+        (f"speculation committed {s['accepted_tokens_per_step']:.2f} "
+         f"tokens/row-step (expected > 1: verify is not amortizing)")
+    emit("serving.speculative", s["wall_s"] * 1e6,
+         f"k={spec.k} slots={s['n_slots']} requests={n_requests + 1} "
+         f"spec_rounds={s['spec_rounds']} "
+         f"draft_tokens={s['draft_tokens']} "
+         f"spec_accept_reduction={s['spec_acceptance_rate'] * 100:.0f}% "
+         f"accepted_tokens_per_step={s['accepted_tokens_per_step']:.2f} "
+         f"decode_tokens={s['decode_tokens']} "
+         f"baseline_steps={base['steps']} spec_steps={s['steps']} "
+         f"preemptions={s['preemptions']} parity=ok leak=0")
+
+
 def dry_rows():
     """The serving snapshot area (``benchmarks.run --record/--check``):
     the three paged-engine rows in dry mode — untrained tiny model, small
@@ -615,6 +693,7 @@ def dry_rows():
     beam_serving(dry=True)
     latency_serving(dry=True)
     profile_serving(dry=True)
+    speculative_serving(dry=True)
 
 
 def run():
@@ -629,6 +708,7 @@ def run():
     beam_serving()
     latency_serving()
     profile_serving()
+    speculative_serving()
 
 
 if __name__ == "__main__":
@@ -650,6 +730,9 @@ if __name__ == "__main__":
     ap.add_argument("--profile", action="store_true",
                     help="run only the serving.profile section (roofline-"
                          "attributed kernel profiling + drift canary)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="run only the serving.speculative section (draft-"
+                         "then-verify decode vs the plain greedy baseline)")
     ap.add_argument("--dry", action="store_true",
                     help="smoke mode: untrained tiny model, small workload")
     args = ap.parse_args()
@@ -666,5 +749,7 @@ if __name__ == "__main__":
         latency_serving(dry=args.dry)
     elif args.profile:
         profile_serving(dry=args.dry)
+    elif args.speculative:
+        speculative_serving(dry=args.dry)
     else:
         run()

@@ -103,7 +103,8 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
                     max_tokens: int, rng, scorer, n_slots: int = 8,
                     prompt_len: Optional[int] = None,
                     sc: SamplerConfig = SamplerConfig(temperature=0.8),
-                    prefix_cache=None, tracer=None, profiler=None):
+                    prefix_cache=None, tracer=None, profiler=None,
+                    spec=None):
     """Best-of-N over a task set through the continuous-batching scheduler.
 
     Every task is one TTS request: one prefill, ``fork`` into ``n`` slots;
@@ -129,7 +130,7 @@ def serve_best_of_n(engine, tok, tasks: Sequence[T.MathTask], *, n: int,
     sched = ContinuousScheduler(engine, n_slots=n_slots,
                                 prompt_len=prompt_len,
                                 prefix_cache=prefix_cache, tracer=tracer,
-                                profiler=profiler)
+                                profiler=profiler, spec=spec)
     # the pool's peak/CoW counters are lifetime values on a shared engine;
     # rebase them so this row reports its own interval, not the sweep's
     cow_base = engine.pool.reset_peak() if engine.paged else 0
@@ -191,7 +192,8 @@ def serve_beam_search(engine, tok, tasks: Sequence[T.MathTask], *,
                       max_steps: int = 8, rng, prm, n_slots: int = 8,
                       prompt_len: Optional[int] = None,
                       sc: SamplerConfig = SamplerConfig(temperature=0.8),
-                      prefix_cache=None, tracer=None, profiler=None):
+                      prefix_cache=None, tracer=None, profiler=None,
+                      spec=None):
     """Step-level PRM beam search over a task set through the
     continuous-batching scheduler (the production counterpart of the
     direct ``core.beam_search`` path).
@@ -216,7 +218,7 @@ def serve_beam_search(engine, tok, tasks: Sequence[T.MathTask], *,
     sched = ContinuousScheduler(engine, n_slots=n_slots,
                                 prompt_len=prompt_len,
                                 prefix_cache=prefix_cache, tracer=tracer,
-                                profiler=profiler)
+                                profiler=profiler, spec=spec)
     cow_base = engine.pool.reset_peak() if engine.paged else 0
     cache_base = prefix_cache.stats() if prefix_cache is not None else None
     dot_id = int(tok.encode(".", bos=False)[0])
@@ -261,7 +263,8 @@ def serve_beam_search(engine, tok, tasks: Sequence[T.MathTask], *,
 
 def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
           rng, scorer, *, continuous: bool = False, n_slots: int = 8,
-          prefix_cache=None, tracer=None, profiler=None):
+          prefix_cache=None, tracer=None, profiler=None, spec_decode=None,
+          sc: Optional[SamplerConfig] = None):
     """Accuracy / decode-cost for each spec — one row per Pareto point.
 
     ``continuous=True`` runs Best-of-N and beam-search specs through the
@@ -273,8 +276,16 @@ def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
     :class:`~repro.serving.telemetry.Tracer` shared the same way: every
     row's scheduler records its lifecycle events into it, and each row's
     ``serving`` dict carries that scheduler's ``ttft_*``/``itl_*``/
-    ``queue_wait_*``/``step_time_*`` percentile keys.
+    ``queue_wait_*``/``step_time_*`` percentile keys.  ``spec_decode``
+    (continuous rows, paged engines) is a
+    :class:`~repro.serving.engine.SpecConfig` enabling draft-then-verify
+    decode rounds; each row's ``serving`` dict then carries
+    ``spec_rounds`` / ``spec_acceptance_rate`` /
+    ``accepted_tokens_per_step``.  Speculative rounds only trigger under
+    greedy sampling, so pass ``sc=SamplerConfig(greedy=True)`` alongside
+    it (``sc=None`` keeps each serving path's default sampler).
     """
+    sc_kwargs = {} if sc is None else {"sc": sc}
     rows = []
     for spec in specs:
         if continuous and spec.method == "best_of_n":
@@ -284,7 +295,7 @@ def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
                 max_tokens=spec.max_tokens, rng=k, scorer=scorer,
                 n_slots=max(n_slots, spec.budget),
                 prefix_cache=prefix_cache, tracer=tracer,
-                profiler=profiler))
+                profiler=profiler, spec=spec_decode, **sc_kwargs))
             continue
         if continuous and spec.method == "beam_search":
             rng, k = jax.random.split(rng)
@@ -295,7 +306,7 @@ def sweep(engine, tok, tasks: Sequence[T.MathTask], specs: Sequence[TTSSpec],
                 step_tokens=spec.step_tokens, max_steps=spec.beam_steps,
                 rng=k, prm=scorer, n_slots=max(n_slots, width * expand),
                 prefix_cache=prefix_cache, tracer=tracer,
-                profiler=profiler))
+                profiler=profiler, spec=spec_decode, **sc_kwargs))
             continue
         correct = cost = 0
         for task in tasks:

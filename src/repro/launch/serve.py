@@ -79,6 +79,22 @@ def main():
                          "selection")
     ap.add_argument("--step-tokens", type=int, default=16,
                     help="token budget per reasoning step")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft-then-verify rounds "
+                         "committing up to K tokens per slot per step "
+                         "(greedy acceptance — outputs stay bit-identical "
+                         "to plain decoding); 0 disables; requires "
+                         "--continuous --paged; defaults to self-drafting "
+                         "unless --draft-model is given")
+    ap.add_argument("--draft-model", default="",
+                    help="configs-registry arch of the small draft model "
+                         "proposing tokens for --spec-k (smoke config, "
+                         "vocab aligned to the target)")
+    ap.add_argument("--self-draft", action="store_true",
+                    help="draft with the target model itself on a forked "
+                         "(copy-on-write) snapshot of its paged state — "
+                         "no extra params, 100%% acceptance; the "
+                         "machinery-exercising mode for --spec-k")
     ap.add_argument("--trace", default="",
                     help="write a Chrome-trace-event JSON of the request "
                          "lifecycle (slots as tracks, scheduler/engine "
@@ -190,6 +206,26 @@ def main():
         from repro.serving.profiling import KernelProfiler
 
         profiler = KernelProfiler(canary_rate=args.canary_rate)
+    spec_decode = None
+    if args.spec_k or args.draft_model or args.self_draft:
+        if not args.spec_k:
+            raise SystemExit("--draft-model/--self-draft need --spec-k K "
+                             "(the proposal budget per round)")
+        if not (args.paged and args.continuous):
+            raise SystemExit("--spec-k requires --paged --continuous "
+                             "(draft lanes and rejected suffixes are "
+                             "refcount operations on the block pool)")
+        from repro.serving.engine import SpecConfig
+
+        spec_decode = SpecConfig(
+            k=args.spec_k, draft_model=args.draft_model,
+            self_draft=args.self_draft or not args.draft_model)
+        # acceptance compares greedy argmaxes, so speculative serving
+        # decodes greedily (that is also what makes it bit-identical to
+        # the plain path)
+        print(f"[serve] speculative decoding: k={args.spec_k} "
+              f"{'draft=' + args.draft_model if args.draft_model else 'self-draft'}"
+              f" (greedy sampling forced)")
     if args.fewshot:
         tasks = T.shared_prefix_dataset(123, args.tasks,
                                         n_shots=args.fewshot)
@@ -200,10 +236,15 @@ def main():
                    max_tokens=args.max_tokens, beam_width=args.beam_width,
                    beam_expand=args.beam_expand, beam_steps=args.beam_steps,
                    step_tokens=args.step_tokens)
+    sc = None
+    if spec_decode is not None:
+        from repro.serving.sampler import SamplerConfig
+
+        sc = SamplerConfig(greedy=True)
     rows = sweep(engine, tok, tasks, [spec], jax.random.key(0), scorer,
                  continuous=args.continuous, n_slots=args.slots,
                  prefix_cache=prefix_cache, tracer=tracer,
-                 profiler=profiler)
+                 profiler=profiler, spec_decode=spec_decode, sc=sc)
     if args.trace:
         tracer.write_chrome_trace(args.trace)
         print(f"[serve] trace: {len(tracer.events)} events / "
@@ -264,6 +305,12 @@ def main():
                   f"queue_wait_p99={s['queue_wait_p99'] * 1e3:.1f}ms "
                   f"step_time_p50={s['step_time_p50'] * 1e3:.1f}ms "
                   f"step_time_p99={s['step_time_p99'] * 1e3:.1f}ms")
+            if s.get("spec_rounds"):
+                print(f"[serve] speculative: rounds={s['spec_rounds']} "
+                      f"draft_tokens={s['draft_tokens']} "
+                      f"acceptance_rate={s['spec_acceptance_rate']:.2f} "
+                      f"accepted_tokens_per_step="
+                      f"{s['accepted_tokens_per_step']:.2f}")
             if s.get("beam_boundaries"):
                 print(f"[serve] beam: boundaries={s['beam_boundaries']} "
                       f"expansions={s['beam_expansions']} "

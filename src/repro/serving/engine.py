@@ -202,6 +202,10 @@ class DecodeEngine:
         self._merge_paged_jit = jax.jit(self._merge_paged_impl)
         self._merge_paged_donate_jit = jax.jit(self._merge_paged_impl,
                                                donate_argnums=(0,))
+        self._spec_verify_jit = jax.jit(
+            self._spec_verify_impl, donate_argnums=(5, 6),
+            static_argnames=("prefix_w", "stop_ids"))
+        self._forced_jit = jax.jit(self._forced_step_impl)
 
     @property
     def table_width(self) -> int:
@@ -242,6 +246,21 @@ class DecodeEngine:
         (``repro.kernels.ops.lut_dequant_gather`` — bit-identical to the
         XLA ``dequantize_for_pool`` path it replaces).
         """
+        prefix = self._gather_prefix(table, pool_k, pool_v, cached_lens,
+                                     prefix_w=prefix_w)
+        logits, cache = self.model.prefill(
+            params, tokens, self.cfg, self.par, max_len=self.max_len,
+            lengths=lengths,
+            paged={"k": pool_k, "v": pool_v, "table": table},
+            prefix=prefix)
+        return logits, cache["k"], cache["v"]
+
+    def _gather_prefix(self, table, pool_k, pool_v, lens, *, prefix_w: int):
+        """Dequant-gather the first ``prefix_w`` table columns of every row
+        into a dense (L, B, prefix_w*bs, Hkv, D) prefix view — the shared
+        read path of the partial prefill and the speculative verify
+        forward.  Invalid slots (rows shorter than the bucket) are masked
+        downstream by ``lens`` inside ``forward``."""
         from repro.kernels import ops as kops
 
         bs = self.pool.block_size
@@ -255,14 +274,7 @@ class DecodeEngine:
 
             return kops.lut_dequant_gather(jax.tree.map(leaf, pool))
 
-        prefix = {"k": gather(pool_k), "v": gather(pool_v),
-                  "len": cached_lens}
-        logits, cache = self.model.prefill(
-            params, tokens, self.cfg, self.par, max_len=self.max_len,
-            lengths=lengths,
-            paged={"k": pool_k, "v": pool_v, "table": table},
-            prefix=prefix)
-        return logits, cache["k"], cache["v"]
+        return {"k": gather(pool_k), "v": gather(pool_v), "len": lens}
 
     def prefill(self, tokens: jnp.ndarray, lengths: Optional[jnp.ndarray] = None,
                 embeddings=None, *, cached_table=None,
@@ -612,7 +624,8 @@ class DecodeEngine:
         )
 
     # -- paged block bookkeeping ---------------------------------------------
-    def prepare_decode(self, state: GenState, n_steps: int = 1) -> GenState:
+    def prepare_decode(self, state: GenState, n_steps: int = 1,
+                       clamp: bool = False) -> GenState:
         """Host-side paged bookkeeping before decoding ``n_steps`` tokens.
 
         For every live (not-done) row: allocate the blocks its next
@@ -622,6 +635,12 @@ class DecodeEngine:
         covers it, so an :class:`OutOfBlocks` raise leaves the pool and the
         state untouched — the scheduler's preemption hook.  No-op in dense
         mode.
+
+        ``clamp=True`` caps each row's plan at the usable sequence length
+        instead of raising: a speculative verify plans ``k`` positions for
+        every row, and a row near its budget simply has its over-length
+        proposals routed to the scratch offset (never committed — the
+        scheduler caps its proposal count to the remaining budget anyway).
         """
         if not self.paged:
             return state
@@ -641,6 +660,8 @@ class DecodeEngine:
             if done[i]:
                 continue
             last = int(clen[i]) + n_steps - 1   # final position written
+            if clamp:
+                last = min(last, self.max_len - 2)
             if last > self.max_len - 2:
                 raise ValueError(
                     f"row {i}: decoding {n_steps} steps from length "
@@ -916,6 +937,231 @@ class DecodeEngine:
         return dataclasses.replace(state,
                                    done=state.done.at[rows].set(False))
 
+    # -- speculative decoding (draft-then-verify) ----------------------------
+    def _spec_verify_impl(self, params, state: GenState, xs, n_prop,
+                          row_stops, pool_k, pool_v, *, prefix_w: int,
+                          stop_ids: tuple):
+        """Verify ``W`` proposed tokens per row in ONE target forward.
+
+        ``xs`` (B, W): column 0 is the target's own pending-logits argmax
+        (always correct under greedy), columns 1.. are draft proposals.
+        The forward consumes all W tokens while attending over each row's
+        committed prefix (gathered through its block table, exactly the
+        partial-prefill read path) and returns logits at every position;
+        position j's argmax is what greedy decoding *would* sample after
+        ``xs[:, :j+1]`` — agreement with ``xs[:, j+1]`` extends the
+        accepted prefix, the first disagreement cuts it.  Committed stop
+        tokens are consumed (KV written, counted) exactly like
+        ``_step_core``; everything past the acceptance point is masked
+        out of lengths/logprobs and its already-scattered KV is reclaimed
+        host-side by :meth:`trim_rows` (a block free, never a copy)."""
+        from repro.models import transformer
+
+        B, W = xs.shape
+        bs = self.pool.block_size
+        table = state.cache["table"]
+        clen = state.cache_len
+        prefix = self._gather_prefix(table, pool_k, pool_v, clen,
+                                     prefix_w=prefix_w)
+        logits, kvs, _ = self.model.forward(
+            params, xs, self.cfg, self.par, return_kv=True, prefix=prefix)
+        logits = logits.astype(jnp.float32)          # (B, W, V)
+        # scatter all W proposal KVs at each row's write frontier; done
+        # (frozen) rows route to the scratch clamp like _step_core
+        start = jnp.where(state.done, self.max_len, clen)
+        pk = transformer._scatter_suffix_blocks(pool_k, kvs[0], table, bs,
+                                                start)
+        pv = transformer._scatter_suffix_blocks(pool_v, kvs[1], table, bs,
+                                                start)
+        # greedy longest-agreeing-prefix acceptance: token 0 always
+        # commits (it was sampled from the real pending logits), token
+        # j >= 1 commits iff every earlier proposal agreed with the
+        # target's argmax — and a committed stop truncates the run
+        tgt = jnp.argmax(logits[:, :-1, :], axis=-1).astype(jnp.int32)
+        agree = (xs[:, 1:] == tgt).astype(jnp.int32)
+        jidx = jnp.arange(W, dtype=jnp.int32)[None, :]
+        ok = jnp.concatenate(
+            [jnp.ones((B, 1), jnp.int32), jnp.cumprod(agree, axis=1)],
+            axis=1)
+        ok = ok * (jidx < n_prop[:, None]).astype(jnp.int32)
+        is_stop = jnp.zeros((B, W), bool)
+        for s in stop_ids:
+            is_stop = is_stop | (xs == s)
+        if row_stops is not None:
+            is_stop = is_stop | (xs == row_stops[:, None])
+        stop_commit = ok * is_stop.astype(jnp.int32)
+        before = jnp.cumsum(stop_commit, axis=1) - stop_commit
+        commit = ok * (before == 0).astype(jnp.int32)
+        commit = commit * (~state.done).astype(jnp.int32)[:, None]
+        a = jnp.sum(commit, axis=1).astype(jnp.int32)      # accepted count
+        new_done = state.done | jnp.any(commit.astype(bool) & is_stop,
+                                        axis=1)
+        # next pending logits = the target's distribution after the last
+        # committed token (frozen for done rows, like _step_core)
+        idx = jnp.clip(a - 1, 0, W - 1)
+        q_next = jnp.take_along_axis(logits, idx[:, None, None],
+                                     axis=1)[:, 0]
+        pending = jnp.where(state.done[:, None], state.pending_logits,
+                            q_next)
+        # per-token logprobs under the distribution each was sampled
+        # from: column 0 under the old pending logits, column j under
+        # the verify logits at j-1 — committed columns only
+        dists = jnp.concatenate(
+            [state.pending_logits[:, None, :], logits[:, :-1, :]], axis=1)
+        lps = jax.vmap(logprobs_of, in_axes=(1, 1), out_axes=1)(dists, xs)
+        new_state = GenState(
+            cache=state.cache,
+            cache_len=clen + a,
+            pending_logits=pending,
+            done=new_done,
+            logprob_sum=state.logprob_sum
+            + jnp.sum(lps * commit.astype(jnp.float32), axis=1),
+            n_gen=state.n_gen + a,
+        )
+        return new_state, commit, pk, pv
+
+    def spec_verify(self, state: GenState, xs, n_prop, row_stops=None,
+                    stop_ids: tuple = ()):
+        """Speculative verify step: commit the longest greedy-agreeing
+        prefix of ``xs`` (B, W) per row in one batched target forward.
+
+        ``xs[:, 0]`` must be the argmax of ``state.pending_logits`` (the
+        token a plain greedy step would emit — so a round always commits
+        at least one token per live row) and ``n_prop`` (B,) the number
+        of valid columns per row; padding beyond it is ignored.  Returns
+        ``(new_state, commit)`` with ``commit`` a (B, W) host 0/1 prefix
+        mask — row i committed ``xs[i, :commit[i].sum()]``.  Blocks for
+        the full W-token horizon are planned up front (may raise
+        :class:`OutOfBlocks` — state and pool untouched, the scheduler's
+        preemption hook) and the rejected suffix's blocks are reclaimed
+        by :meth:`trim_rows`.  Paged only."""
+        if not self.paged:
+            raise ValueError("spec_verify requires the paged KV layout "
+                             "(DecodeEngine(paged=True))")
+        W = int(xs.shape[1])
+        stop_ids = tuple(stop_ids) or (self.eos_id,)
+        tr = self.tracer
+        t0 = tr.now() if tr is not None else 0.0
+        state = self.prepare_decode(state, W, clamp=True)
+        if tr is not None:
+            tr.span("plan", t0)
+        bs = self.pool.block_size
+        clen_h, done_h = (np.asarray(a) for a in jax.device_get(
+            (state.cache_len, state.done)))
+        live = ~done_h
+        # bucket the prefix gather like the partial prefill: block
+        # granular, so a recompile costs one new shape per block of
+        # context growth, not one per round
+        top = int(clen_h[live].max()) if live.any() else 1
+        prefix_w = max(1, -(-top // bs))
+        prof = self.profiler
+        t1 = tr.now() if tr is not None else 0.0
+        pt0 = prof.phase_begin("spec_verify") if prof is not None else 0.0
+        st, commit, pk, pv = self._spec_verify_jit(
+            self.params, state, jnp.asarray(xs, jnp.int32),
+            jnp.asarray(n_prop, jnp.int32), row_stops, self.pool.k,
+            self.pool.v, prefix_w=prefix_w, stop_ids=stop_ids)
+        if prof is not None:
+            prof.phase_end("spec_verify", pt0,
+                           outputs=(commit, st.pending_logits))
+        self.pool.adopt(pk, pv)
+        commit_h = np.asarray(jax.device_get(commit))
+        if tr is not None:
+            tr.span("spec_verify", t1, batch=int(xs.shape[0]), width=W)
+        return st, commit_h
+
+    def trim_rows(self, state: GenState, rows) -> GenState:
+        """Free the planned-but-unused tail blocks of ``rows`` after a
+        speculative round: blocks past ``blocks_for(cache_len)`` were
+        allocated (or copy-on-written — either way private, refcount 1)
+        for proposals the verify rejected, so releasing them *is* the
+        cost of rejection — a free-list append, zero KV bytes moved.
+        Callers pass only rows that were live at verify time (frozen
+        beam lanes keep their surplus blocks like any frozen row).
+        No-op in dense mode."""
+        if not self.paged:
+            return state
+        rows = np.asarray(rows, np.int64).ravel()
+        if not rows.size:
+            return state
+        bs = self.pool.block_size
+        table, n_blocks, clen = (np.array(a) for a in jax.device_get(
+            (state.cache["table"], state.cache["n_blocks"],
+             state.cache_len)))
+        changed = False
+        for r in rows:
+            keep = blocks_for(int(clen[r]), bs)
+            if n_blocks[r] > keep:
+                self.pool.release(table[r, keep:n_blocks[r]])
+                table[r, keep:n_blocks[r]] = 0
+                n_blocks[r] = keep
+                changed = True
+        if not changed:
+            return state
+        return dataclasses.replace(
+            state, cache={"table": jnp.asarray(table),
+                          "n_blocks": jnp.asarray(n_blocks)})
+
+    def spec_snapshot(self, state: GenState, rows) -> GenState:
+        """Self-drafting draft lane: a second state aliasing ``rows``'
+        blocks via a refcount bump — the draft lane IS a paged fork.  The
+        draft's first divergent write copy-on-writes its frontier block
+        (``prepare_decode`` sees refcount > 1), so the target's KV is
+        never touched, and ``release_rows`` on the snapshot undoes the
+        bump: rejection frees blocks, never copies KV.  Rows not in
+        ``rows`` come back done with empty tables (idle draft lanes)."""
+        if not self.paged:
+            raise ValueError("spec_snapshot requires the paged KV layout "
+                             "(DecodeEngine(paged=True))")
+        rows = [int(r) for r in np.asarray(rows, np.int64).ravel()]
+        table, n_blocks = (np.array(a) for a in jax.device_get(
+            (state.cache["table"], state.cache["n_blocks"])))
+        mask = np.zeros(table.shape[0], bool)
+        mask[rows] = True
+        for r in rows:
+            self.pool.retain(table[r, :n_blocks[r]])
+        table[~mask] = 0
+        n_blocks[~mask] = 0
+        return GenState(
+            cache={"table": jnp.asarray(table),
+                   "n_blocks": jnp.asarray(n_blocks)},
+            cache_len=state.cache_len,
+            pending_logits=state.pending_logits,
+            done=state.done | jnp.asarray(~mask),
+            logprob_sum=state.logprob_sum,
+            n_gen=state.n_gen)
+
+    def _forced_step_impl(self, params, state: GenState, tok):
+        tok = jnp.where(state.done, self.pad_id, tok).astype(jnp.int32)
+        new_len = jnp.where(state.done, state.cache_len,
+                            state.cache_len + 1)
+        model_len = jnp.where(state.done, self.max_len, new_len)
+        logits, cache = self.model.decode_step(
+            params, tok[:, None], state.cache, model_len, self.cfg,
+            self.par)
+        for key in ("conv", "ssm"):
+            if key in cache:
+                d = state.done.reshape((1, -1)
+                                       + (1,) * (cache[key].ndim - 2))
+                cache[key] = jnp.where(d, state.cache[key], cache[key])
+        pending = jnp.where(state.done[:, None], state.pending_logits,
+                            logits.astype(jnp.float32))
+        return dataclasses.replace(state, cache=cache, cache_len=new_len,
+                                   pending_logits=pending)
+
+    def forced_step(self, state: GenState, tok) -> GenState:
+        """Feed a *given* token per row (no sampling): the scheduler's
+        draft-model engine consumes the target's already-committed token
+        before proposing its continuation.  Logprob/n_gen bookkeeping is
+        untouched — draft-side counts never reach scheduler metrics.
+        Dense layout only (the draft engine is dense; its whole state is
+        scratch that the next round resyncs)."""
+        if self.paged:
+            raise ValueError("forced_step supports the dense KV layout "
+                             "only (the speculative draft engine)")
+        return self._forced_jit(self.params, state,
+                                jnp.asarray(tok, jnp.int32))
+
 
 # ---------------------------------------------------------------------------
 # Continuous batching scheduler (slot-based)
@@ -964,6 +1210,44 @@ class BeamSpec:
         return self.width * self.expand
 
 
+@dataclass(frozen=True)
+class SpecConfig:
+    """Speculative decoding mode for the continuous scheduler.
+
+    Each scheduler step becomes a draft-then-verify *round*: a cheap
+    drafter proposes up to ``k`` tokens per eligible row and ONE batched
+    target forward verifies all of them, committing the longest prefix
+    that agrees with what plain greedy decoding would have produced — so
+    speculative greedy output is bit-identical to the direct path, the
+    only thing that changes is tokens per step.  Exactly one draft source
+    must be chosen:
+
+    * ``self_draft=True`` — the target drafts for itself on a forked
+      (refcount-bumped) snapshot of its own paged state: zero extra
+      params, and the draft always agrees, so every round commits all
+      ``k`` tokens.  This is the machinery-exercising / upper-bound mode.
+    * ``draft_model="<arch>"`` — a small model from the configs registry
+      (smoke config, vocab aligned to the target) runs k-1 cheap dense
+      decode steps per round; acceptance then depends on how often the
+      draft's greedy argmax matches the target's.
+
+    Speculation applies under greedy sampling on a paged engine only;
+    beam lanes and ``Request(no_spec=True)`` rows ride along in the same
+    verify at one token per round (plain-step-equivalent)."""
+
+    k: int = 4                   # max tokens committed per row per round
+    draft_model: str = ""        # configs-registry arch of the drafter
+    self_draft: bool = False     # target drafts on a forked snapshot
+
+    def __post_init__(self):
+        if self.k < 2:
+            raise ValueError(f"SpecConfig.k must be >= 2 (k={self.k} "
+                             f"proposes nothing beyond the plain step)")
+        if bool(self.draft_model) == bool(self.self_draft):
+            raise ValueError("SpecConfig needs exactly one draft source: "
+                             "draft_model=<arch> or self_draft=True")
+
+
 @dataclass
 class Request:
     req_id: int
@@ -971,6 +1255,7 @@ class Request:
     max_new_tokens: int = 64
     n_samples: int = 1           # >1: TTS fan-out sharing one prefill (fork)
     search: Optional[BeamSpec] = None  # beam-search tree request class
+    no_spec: bool = False        # opt out of speculative decoding rounds
 
 
 @dataclass
@@ -1023,10 +1308,14 @@ class _BeamRun:
 @dataclass
 class StepRecord:
     step: int
-    occupancy: int               # rows decoding this step (== tokens decoded)
+    occupancy: int               # rows decoding this step
     admitted: int                # requests admitted this step
     prefill_tokens: int          # prompt tokens prefilled this step
     wall_s: float = 0.0          # host wall time of this step_once call
+    # tokens committed this step; None = one per occupied row (plain
+    # decode).  Speculative rounds commit several per row, so occupancy
+    # alone would under-count throughput.
+    decode_tokens: Optional[int] = None
 
 
 class SchedulerMetrics:
@@ -1068,6 +1357,17 @@ class SchedulerMetrics:
         self.beam_prunes = 0
         self.prm_batches = 0
         self.prm_candidates = 0
+        # speculative decoding: one "round" is one draft+verify cycle.
+        # draft_tokens counts proposals beyond the mandatory first token
+        # per eligible row, accepted those the verify committed beyond
+        # it; committed/row_steps counts every committed token over every
+        # (row, round) pair, so accepted_tokens_per_step > 1 iff
+        # speculation beat one-token-per-step decoding.
+        self.spec_rounds = 0
+        self.spec_draft_tokens = 0
+        self.spec_accepted_tokens = 0
+        self.spec_committed_tokens = 0
+        self.spec_row_steps = 0
         # per-request latency records (telemetry.RequestLatency), appended
         # by the scheduler at request completion when a Tracer is attached
         # — the histogram behind the summary's ttft/itl/queue_wait
@@ -1096,9 +1396,11 @@ class SchedulerMetrics:
 
     def summary(self) -> dict:
         steps = len(self.records)
-        decode = sum(r.occupancy for r in self.records)
+        decode = sum(r.occupancy if r.decode_tokens is None
+                     else r.decode_tokens for r in self.records)
+        occ_rows = sum(r.occupancy for r in self.records)
         prefill = sum(r.prefill_tokens for r in self.records)
-        occ = (decode / (steps * self.n_slots)) if steps else 0.0
+        occ = (occ_rows / (steps * self.n_slots)) if steps else 0.0
         admitted = sum(r.admitted for r in self.records)
         sizes = self.admission_batch_sizes
         # tail latency (seconds).  Every key below must survive an
@@ -1146,6 +1448,14 @@ class SchedulerMetrics:
             "prm_candidates_per_batch": (self.prm_candidates
                                          / self.prm_batches
                                          if self.prm_batches else 0.0),
+            "spec_rounds": self.spec_rounds,
+            "draft_tokens": self.spec_draft_tokens,
+            "spec_acceptance_rate": (self.spec_accepted_tokens
+                                     / self.spec_draft_tokens
+                                     if self.spec_draft_tokens else 0.0),
+            "accepted_tokens_per_step": (self.spec_committed_tokens
+                                         / self.spec_row_steps
+                                         if self.spec_row_steps else 0.0),
             "latency_requests": len(lat),
             "ttft_p50": percentile(ttfts, 50),
             "ttft_p90": percentile(ttfts, 90),
@@ -1245,6 +1555,25 @@ class ContinuousScheduler:
     tree like any group (all lanes released, the search restarts on
     re-admission).  Boundary/expansion/prune and PRM batching counters
     land in ``SchedulerMetrics``.
+
+    **Speculative decoding** (``spec=``:class:`SpecConfig`, paged engines
+    under greedy sampling): each decode step becomes a draft-then-verify
+    round — a drafter (the target itself on a refcount-bumped snapshot,
+    or a small dense registry model) proposes up to ``spec.k`` tokens per
+    eligible row, one batched ``engine.spec_verify`` forward checks all
+    of them, and the longest greedy-agreeing prefix commits, so outputs
+    stay bit-identical to plain greedy decoding.  Draft lanes are pure
+    fork/CoW bookkeeping and a rejected suffix is a block *free* (never a
+    KV copy, reclaimed by ``engine.trim_rows``).  Beam lanes and
+    ``Request(no_spec=True)`` rows ride the verify at one token per
+    round; canary steps and non-greedy samplers fall back to the plain
+    step.  ``OutOfBlocks`` anywhere in the round aborts it cleanly (the
+    snapshot's references are dropped first) and retries after
+    preemption.  Round/acceptance counters land in ``SchedulerMetrics``
+    (``spec_acceptance_rate``, ``accepted_tokens_per_step``), a
+    ``spec_verify`` span and ``spec_accepted_tokens`` gauge in the
+    tracer, and the verify forward is attributed as its own profiler
+    phase.
     """
 
     def __init__(self, engine: DecodeEngine, n_slots: int = 8,
@@ -1252,7 +1581,8 @@ class ContinuousScheduler:
                  prefix_cache: Optional[PrefixCache] = None,
                  max_admission_batch: Optional[int] = None,
                  tracer: Optional[Tracer] = None,
-                 profiler=None):
+                 profiler=None,
+                 spec: Optional[SpecConfig] = None):
         self.engine = engine
         # request-lifecycle telemetry (None = default: zero overhead, no
         # events, bit-identical scheduling).  The scheduler owns its
@@ -1294,6 +1624,32 @@ class ContinuousScheduler:
                 raise ValueError("prefix_cache is bound to a different "
                                  "KVPool than the engine's")
         self.cache = prefix_cache
+        self.spec = spec
+        # draft-model mode: one persistent dense engine whose KV shadows
+        # the target's committed context (prompts prefilled at admission,
+        # cache_len resynced each round, proposals rolled back to the
+        # verify's acceptance point).  Untrained smoke params by default —
+        # callers wanting a *useful* drafter swap self._draft.params.
+        self._draft: Optional[DecodeEngine] = None
+        self._draft_state: Optional[GenState] = None
+        if spec is not None:
+            if not engine.paged:
+                raise ValueError(
+                    "speculative decoding requires a paged engine "
+                    "(DecodeEngine(paged=True)): draft lanes and rejected "
+                    "suffixes are refcount operations on the block pool")
+            if spec.draft_model:
+                from repro.configs.registry import get_config
+
+                dcfg = get_config(spec.draft_model, smoke=True)
+                if dcfg.vocab_size != engine.cfg.vocab_size:
+                    dcfg = dcfg.with_(vocab_size=engine.cfg.vocab_size)
+                dparams = api.get_model(dcfg).init_params(
+                    jax.random.key(0), dcfg)
+                self._draft = DecodeEngine(
+                    dparams, dcfg, max_len=engine.max_len,
+                    eos_id=engine.eos_id, pad_id=engine.pad_id)
+                self._draft_state = self._draft.empty_state(n_slots)
         self.queue: deque[Request] = deque()
         self.slots: list[Optional[_Slot]] = [None] * n_slots
         self.state: Optional[GenState] = None   # built on first admission
@@ -1942,6 +2298,168 @@ class ContinuousScheduler:
             self.tracer.gauge("canary_max_logit_err", max_err)
             self.tracer.gauge("canary_flips", flips)
 
+    # -- speculative rounds --------------------------------------------------
+    def _spec_eligible(self, slot: _Slot) -> bool:
+        """Rows speculation may commit > 1 token for: plain chat/BoN rows
+        that did not opt out.  Beam lanes stay one-token-per-round (their
+        freeze/boundary bookkeeping is stepwise)."""
+        return slot.req.search is None and not slot.req.no_spec
+
+    def _sync_draft_admissions(self, live: list) -> None:
+        """Prefill newly admitted rows' prompts into the persistent dense
+        draft engine (draft-model mode) so its KV shadows the target's
+        committed context from the prompt on.  Rows admitted for beam or
+        opted-out requests are skipped — the drafter never proposes for
+        them."""
+        rows = [i for i in live
+                if self.slots[i].first_decode_step < 0
+                and self._spec_eligible(self.slots[i])]
+        if not rows:
+            return
+        padded = [self._pad(self.slots[i].req.prompt) for i in rows]
+        st = self._draft.prefill(
+            jnp.stack([t for t, _ in padded]),
+            jnp.array([ln for _, ln in padded], jnp.int32))
+        self._draft_state = self._draft.merge_rows(
+            self._draft_state, st, jnp.array(rows, jnp.int32), donate=True)
+
+    def _draft_proposals_self(self, xs, n_prop, eligible, W, rng, sc):
+        """Self-drafting: run W-1 plain greedy steps on a refcount-bumped
+        snapshot of the target state (the draft lane is a fork; its
+        divergent writes CoW, its release frees — target KV untouched).
+        Fills ``xs[:, 1:]`` in place; returns False when the snapshot ran
+        out of blocks mid-draft (round falls back to a plain step)."""
+        eng = self.engine
+        snap = eng.spec_snapshot(self.state, eligible)
+        try:
+            dts = []
+            for m in range(1, W):
+                frz = [i for i in eligible if int(n_prop[i]) == m]
+                if frz:
+                    snap = eng.freeze_rows(snap, frz)
+                snap, dt = eng.step(snap, rng, sc, stop_ids=self.stop_ids)
+                dts.append(dt)
+            # each row's last proposal comes from its (possibly frozen)
+            # pending logits — the distribution after its final sampled
+            # draft token
+            final = jnp.argmax(snap.pending_logits, axis=-1)
+            dts_h, final_h = (np.asarray(a) for a in jax.device_get(
+                (jnp.stack(dts), final)))
+        except OutOfBlocks:
+            # mid-draft exhaustion: drop the snapshot's references and
+            # let the caller fall back to a plain step (which has its own
+            # preemption path) — nothing leaks, target state untouched
+            eng.release_rows(snap, eligible)
+            return False
+        eng.release_rows(snap, eligible)
+        for i in eligible:
+            npi = int(n_prop[i])
+            for c in range(1, npi - 1):
+                xs[i, c] = int(dts_h[c][i])  # step c+1 sampled column c
+            xs[i, npi - 1] = int(final_h[i])
+        return True
+
+    def _draft_proposals_model(self, xs, n_prop, eligible, W, t0, clen_h,
+                               rng, sc):
+        """Draft-model proposals: resync the dense drafter's lengths to
+        the target's committed context, force-feed the round's first
+        token, then run W-1 cheap greedy steps — every proposal column is
+        *written* to draft KV so a fully-accepted round leaves no hole.
+        Returns the advanced draft state (rolled back to the acceptance
+        point by the caller only after the verify succeeds)."""
+        de = self._draft
+        dn = np.ones(self.n_slots, bool)
+        dn[eligible] = False
+        ds = dataclasses.replace(
+            self._draft_state,
+            cache_len=jnp.asarray(clen_h.astype(np.int32)),
+            done=jnp.asarray(dn))
+        ds = de.forced_step(ds, t0)
+        dts = []
+        for m in range(1, W):
+            frz = [i for i in eligible if int(n_prop[i]) == m]
+            if frz:
+                ds = de.freeze_rows(ds, frz)
+            ds, dt = de.step(ds, rng, sc, stop_ids=self.stop_ids)
+            dts.append(dt)
+        dts_h = np.asarray(jax.device_get(jnp.stack(dts)))
+        for i in eligible:
+            for c in range(1, int(n_prop[i])):
+                xs[i, c] = int(dts_h[c - 1][i])  # step c sampled column c
+        return ds
+
+    def _spec_step(self, rng, sc: SamplerConfig):
+        """One draft-then-verify round over the live batch.  Returns
+        ``(xs, a)`` — proposals and per-row accepted counts — or None to
+        fall back to a plain step (no row can use > 1 proposal, or the
+        self-draft ran out of blocks).  An :class:`OutOfBlocks` from the
+        verify plan propagates to ``step_once``'s preempt-retry loop; the
+        whole round reruns after preemption, and any draft snapshot was
+        already released, so an aborted round leaks nothing."""
+        eng = self.engine
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        done_h, clen_h = (np.asarray(a) for a in jax.device_get(
+            (self.state.done, self.state.cache_len)))
+        n_prop = np.zeros(self.n_slots, np.int32)
+        for i in live:
+            if done_h[i]:
+                continue  # frozen beam lane: rides along, commits nothing
+            slot = self.slots[i]
+            if not self._spec_eligible(slot):
+                n_prop[i] = 1  # plain-step-equivalent lane in the verify
+            else:
+                rem = slot.req.max_new_tokens - len(slot.tokens)
+                n_prop[i] = max(1, min(self.spec.k, rem))
+        W = int(n_prop.max(initial=0))
+        if W < 2:
+            return None
+        eligible = [i for i in live if n_prop[i] > 1]
+        # column 0: the token a plain greedy step would commit right now
+        t0 = np.asarray(jax.device_get(
+            jnp.argmax(self.state.pending_logits, axis=-1))).astype(
+                np.int32)
+        xs = np.full((self.n_slots, W), eng.pad_id, np.int32)
+        for i in live:
+            if n_prop[i]:
+                xs[i, 0] = t0[i]
+        ds = None
+        if self.spec.self_draft:
+            if not self._draft_proposals_self(xs, n_prop, eligible, W,
+                                              rng, sc):
+                return None
+        else:
+            ds = self._draft_proposals_model(
+                xs, n_prop, eligible, W, jnp.asarray(t0), clen_h, rng, sc)
+        self.state, commit_h = eng.spec_verify(
+            self.state, xs, n_prop, row_stops=self._row_stops(),
+            stop_ids=self.stop_ids)
+        a = commit_h.sum(axis=1).astype(np.int64)
+        # reclaim the rejected suffixes' blocks (rows live at verify time
+        # only — frozen lanes keep their blocks like any frozen row)
+        self.state = eng.trim_rows(
+            self.state, [i for i in live if not done_h[i]])
+        if ds is not None:
+            # roll the drafter back to the acceptance point: lengths to
+            # the target's new lengths, all rows idle until the next
+            # round resyncs.  Only committed once the verify succeeded —
+            # a verify OutOfBlocks keeps the pre-round _draft_state.
+            self._draft_state = dataclasses.replace(
+                ds,
+                cache_len=jnp.asarray((clen_h + a).astype(np.int32)),
+                done=jnp.ones((self.n_slots,), bool))
+        m = self.metrics
+        m.spec_rounds += 1
+        for i in eligible:
+            m.spec_draft_tokens += int(n_prop[i]) - 1
+            m.spec_accepted_tokens += int(a[i]) - 1
+            m.spec_committed_tokens += int(a[i])
+            m.spec_row_steps += 1
+        if self.tracer is not None:
+            self.tracer.gauge("spec_accepted_tokens",
+                              int(a[np.asarray(eligible, np.int64)].sum())
+                              if eligible else 0)
+        return xs, a
+
     def step_once(self, rng, sc: SamplerConfig = SamplerConfig()) -> bool:
         """One scheduler step. Returns False when idle (nothing admitted,
         nothing decoding).
@@ -1965,17 +2483,28 @@ class ContinuousScheduler:
         live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:
             return False
+        if self._draft is not None:
+            self._sync_draft_admissions(live)
         for i in live:
             if self.slots[i].first_decode_step < 0:
                 self.slots[i].first_decode_step = self.step_count
         canary = (prof is not None and self.paged and prof.want_canary())
+        # speculative rounds need greedy sampling (acceptance compares
+        # argmaxes) and skip canary steps, whose exact-path replica is
+        # defined over the single-token decode step
+        spec_round = (self.spec is not None and sc.greedy and self.paged
+                      and not canary)
+        spec_out = None
         while True:
             try:
                 if tr is not None:
                     t_dec = tr.now()
-                self.state, toks = self.engine.step(
-                    self.state, rng, sc, stop_ids=self.stop_ids,
-                    row_stops=self._row_stops(), canary=canary)
+                if spec_round:
+                    spec_out = self._spec_step(rng, sc)
+                if spec_out is None:
+                    self.state, toks = self.engine.step(
+                        self.state, rng, sc, stop_ids=self.stop_ids,
+                        row_stops=self._row_stops(), canary=canary)
                 break
             except OutOfBlocks:
                 # atomic: the failed prepare touched neither pool nor state
@@ -1983,9 +2512,17 @@ class ContinuousScheduler:
                 live = [i for i, s in enumerate(self.slots) if s is not None]
         if canary and self.engine.last_canary_logits is not None:
             self._record_canary(live)
-        toks_h, done_h, lp_h, ng_h = jax.device_get(
-            (toks, self.state.done, self.state.logprob_sum,
-             self.state.n_gen))
+        if spec_out is not None:
+            xs_h, a_h = spec_out
+            toks_h = xs_h[:, 0]  # beam tracking sees the stepwise token
+            done_h, lp_h, ng_h = jax.device_get(
+                (self.state.done, self.state.logprob_sum,
+                 self.state.n_gen))
+        else:
+            a_h = None
+            toks_h, done_h, lp_h, ng_h = jax.device_get(
+                (toks, self.state.done, self.state.logprob_sum,
+                 self.state.n_gen))
         if tr is not None:
             # closes after the device_get sync above, so the span is the
             # host-visible latency of this decode step
@@ -2009,12 +2546,18 @@ class ContinuousScheduler:
             slot = self.slots[i]
             if slot.req.search is not None:
                 continue  # beam lanes: tracked per-tree below
-            if bool(done_h[i]):          # sampled a stop id this step
+            # the tokens this row committed this step: the accepted
+            # prefix of its proposals on a speculative round, else the
+            # one sampled token
+            run = ([int(t) for t in xs_h[i, :int(a_h[i])]]
+                   if a_h is not None else [int(toks_h[i])])
+            if bool(done_h[i]):          # committed a stop id this step
+                slot.tokens.extend(run[:-1])  # stop token excluded
                 released_reqs.append((i, slot.req))
                 self._release(i, "stop", float(lp_h[i]), int(ng_h[i]))
                 released.append(i)
                 continue
-            slot.tokens.append(int(toks_h[i]))
+            slot.tokens.extend(run)
             if len(slot.tokens) >= slot.req.max_new_tokens:
                 over_budget.append(i)
                 released.append(i)
@@ -2090,7 +2633,9 @@ class ContinuousScheduler:
         self.metrics.wall_s += wall
         self.metrics.record(StepRecord(
             step=self.step_count, occupancy=len(live), admitted=admitted,
-            prefill_tokens=prefill_tokens, wall_s=wall))
+            prefill_tokens=prefill_tokens, wall_s=wall,
+            decode_tokens=(int(a_h[np.asarray(live, np.int64)].sum())
+                           if a_h is not None else None)))
         if tr is not None:
             tr.span("step", t_step, step=self.step_count,
                     occupancy=len(live))

@@ -13,7 +13,7 @@ from repro.core.beam_search import beam_search
 from repro.core.controller import serve_beam_search
 from repro.data import tasks as T
 from repro.serving.engine import (BeamSpec, ContinuousScheduler,
-                                  DecodeEngine, Request)
+                                  DecodeEngine, Request, SpecConfig)
 from repro.serving.sampler import SamplerConfig
 
 NO_STOP = (9999,)
@@ -160,6 +160,49 @@ def test_mixed_queue_beam_chat_bon(paged_engine, tok):
     s = sched.metrics.summary()
     assert s["beam_boundaries"] >= 1 and s["prm_batches"] >= 1
     assert engine.pool.blocks_in_use == 0
+
+
+def test_beam_lane_frozen_during_spec_verify_resumes_clean(paged_engine,
+                                                           tok):
+    """Freeze/resume × row_stops × speculation: beam lanes never draft
+    (they ride every verify round at exactly one committed token so the
+    boundary bookkeeping stays step-accurate), and a lane frozen at its
+    step budget while speculative verify rounds are still in flight for
+    the chat rows must resume from its committed state with no draft
+    residue — asserted the strong way, by bit-parity of the whole mixed
+    workload against the spec-disabled run.
+
+    The scripted schedule: delimiter ``z`` is never sampled, so every
+    beam lane exhausts its full step budget and takes the freeze path at
+    each boundary while the chat rows keep speculating."""
+    engine = paged_engine
+    assert engine.pool.blocks_in_use == 0
+    task = _beam_tasks(1)[0]
+    chat = {1: "Q:7+5=?A:", 2: "Q:19+23=?A:"}
+
+    def run(spec):
+        sched = ContinuousScheduler(engine, n_slots=8,
+                                    prompt_len=PROMPT_LEN,
+                                    stop_ids=NO_STOP, spec=spec)
+        sched.submit(Request(req_id=0,
+                             prompt=jnp.asarray(tok.encode(task.prompt)),
+                             search=_mean_logprob_spec(tok, delim="z")))
+        for rid, text in chat.items():
+            sched.submit(Request(req_id=rid,
+                                 prompt=jnp.asarray(tok.encode(text)),
+                                 max_new_tokens=10))
+        res = sched.run(jax.random.key(0), GREEDY)
+        assert engine.pool.blocks_in_use == 0
+        return res, sched.metrics.summary(), sched.beam_results[0]
+
+    base, _, beam_base = run(None)
+    got, s, beam_spec = run(SpecConfig(k=4, self_draft=True))
+    assert base == got            # incl. the frozen-then-resumed lanes
+    assert beam_spec["beam_steps"] == beam_base["beam_steps"]
+    assert s["spec_rounds"] > 0   # chat rows really speculated...
+    assert s["beam_boundaries"] >= 1  # ...across a freeze boundary
+    for rid, text in chat.items():
+        assert got[rid] == _reference_tokens(engine, tok, text, 10)
 
 
 def test_beam_preempted_under_block_pressure(trained_tiny, tiny_cfg, tok):

@@ -4,25 +4,36 @@ The fused Pallas table-walk kernels (exact and LUT-softmax) are drop-in
 replacements for the XLA gather fallback inside the *decode* hot loop; a
 full continuous-batching workload on the quantized pool must produce
 argmax-identical greedy token streams whichever backend serves it.
-"""
+
+The speculative cross-feature grid rides the same harness: draft-then-
+verify greedy must be bit-identical to the direct decode path for every
+{fp, q8, q4} pool × {xla, kernel, kernel_lut} attention impl combination
+(the verify forward takes the prefill/kernel path, the baseline the
+decode path — the grid pins both ends), including under OutOfBlocks
+preemption mid-verify, where the draft snapshot's blocks must be
+released atomically (leak-checked by every run)."""
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.data.tasks import gen_dataset
 from repro.models import layers
-from repro.serving.engine import ContinuousScheduler, DecodeEngine, Request
+from repro.serving.engine import (ContinuousScheduler, DecodeEngine,
+                                  Request, SpecConfig)
 from repro.serving.sampler import SamplerConfig
 
+SELF_DRAFT = SpecConfig(k=4, self_draft=True)
 
-def _run_workload(params, cfg, tok, impl, kv_quant="q8"):
+
+def _run_workload(params, cfg, tok, impl, kv_quant="q8", spec=None,
+                  n_blocks=1 + 2 * 4):
     prev = layers.set_paged_attention_impl(impl)
     try:
         eng = DecodeEngine(params, cfg, max_len=32, eos_id=tok.eos_id,
                            pad_id=tok.pad_id, paged=True, block_size=8,
-                           n_blocks=1 + 2 * 4, kv_quant=kv_quant)
+                           n_blocks=n_blocks, kv_quant=kv_quant)
         sched = ContinuousScheduler(eng, n_slots=2, prompt_len=24,
-                                    stop_ids=(tok.eos_id,))
+                                    stop_ids=(tok.eos_id,), spec=spec)
         for i, task in enumerate(gen_dataset(5, 4, reasoning=False,
                                              max_terms=2)):
             sched.submit(Request(req_id=i,
@@ -30,7 +41,7 @@ def _run_workload(params, cfg, tok, impl, kv_quant="q8"):
                                  max_new_tokens=6))
         res = sched.run(jax.random.key(0), SamplerConfig(greedy=True))
         assert eng.pool.blocks_in_use == 0
-        return res
+        return res, sched.metrics.summary()
     finally:
         layers.set_paged_attention_impl(prev)
 
@@ -38,17 +49,49 @@ def _run_workload(params, cfg, tok, impl, kv_quant="q8"):
 @pytest.mark.parametrize("impl", ["kernel", "kernel_lut"])
 def test_scheduler_greedy_parity_quant_pool(trained_tiny, tiny_cfg, tok,
                                             impl):
-    base = _run_workload(trained_tiny, tiny_cfg, tok, "xla")
-    got = _run_workload(trained_tiny, tiny_cfg, tok, impl)
+    base, _ = _run_workload(trained_tiny, tiny_cfg, tok, "xla")
+    got, _ = _run_workload(trained_tiny, tiny_cfg, tok, impl)
     assert base == got, (impl, base, got)
 
 
 def test_scheduler_greedy_parity_fp_pool(trained_tiny, tiny_cfg, tok):
-    base = _run_workload(trained_tiny, tiny_cfg, tok, "xla",
-                         kv_quant="none")
-    got = _run_workload(trained_tiny, tiny_cfg, tok, "kernel_lut",
-                        kv_quant="none")
+    base, _ = _run_workload(trained_tiny, tiny_cfg, tok, "xla",
+                            kv_quant="none")
+    got, _ = _run_workload(trained_tiny, tiny_cfg, tok, "kernel_lut",
+                           kv_quant="none")
     assert base == got
+
+
+@pytest.mark.parametrize("impl", ["xla", "kernel", "kernel_lut"])
+@pytest.mark.parametrize("kv_quant", ["none", "q8", "q4"])
+def test_speculative_greedy_parity_grid(trained_tiny, tiny_cfg, tok, impl,
+                                        kv_quant):
+    """Draft-then-verify greedy ≡ direct greedy for every pool × backend
+    combination, with the acceptance counters live."""
+    base, _ = _run_workload(trained_tiny, tiny_cfg, tok, impl,
+                            kv_quant=kv_quant)
+    got, s = _run_workload(trained_tiny, tiny_cfg, tok, impl,
+                           kv_quant=kv_quant, spec=SELF_DRAFT)
+    assert base == got, (impl, kv_quant, base, got)
+    assert s["spec_rounds"] > 0
+    assert s["spec_acceptance_rate"] > 0
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "q8"])
+def test_speculative_parity_under_out_of_blocks(trained_tiny, tiny_cfg, tok,
+                                                kv_quant):
+    """A pool too small for both slots' speculative growth: verify plans
+    and draft snapshots hit OutOfBlocks mid-round.  The round must abort
+    atomically (draft blocks released before the retry — the harness
+    leak-checks after drain) and the preempt/retry path must land on the
+    same greedy tokens as the direct run."""
+    base, _ = _run_workload(trained_tiny, tiny_cfg, tok, "xla",
+                            kv_quant=kv_quant, n_blocks=1 + 6)
+    got, s = _run_workload(trained_tiny, tiny_cfg, tok, "xla",
+                           kv_quant=kv_quant, spec=SELF_DRAFT,
+                           n_blocks=1 + 6)
+    assert base == got
+    assert s["spec_rounds"] > 0
 
 
 def test_set_paged_attention_impl_validates():

@@ -1,0 +1,253 @@
+"""Randomized pool-invariant stress tests for the paged KV block pool.
+
+A seeded (hypothesis-free, per ``test_quant_properties`` precedent)
+harness drives hundreds of random op sequences — the pool-level moves
+behind the engine's ``fork`` (retain), ``cow``, ``reorder`` (retain +
+release), ``release_rows`` (release) and a speculative reject
+(``spec_snapshot`` retain, draft growth, suffix free) — against both
+:class:`~repro.serving.kv_pool.KVPool` and
+:class:`~repro.serving.kv_quant.QuantKVPool`, checking after EVERY op
+that the pool's refcounts match an independent shadow model, that the
+free list is exactly the zero-refcount id set (no duplicates, no
+scratch), and that the accounting properties stay consistent.  Draining
+every live row at the end must return the pool to zero blocks in use.
+
+A second harness drives the same ops through the engine layer
+(``fork`` / ``reorder`` / ``release_rows`` / ``spec_snapshot``) on real
+block tables, asserting refcount == table-reference-count throughout.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.serving.kv_pool import SCRATCH_BLOCK, KVPool, OutOfBlocks
+from repro.serving.kv_quant import QuantKVPool
+
+CFG = ModelConfig(name="pool-stress", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=192, vocab_size=384,
+                  dtype="float32", param_dtype="float32", remat="none")
+
+
+def _make_pool(mode: str, n_blocks: int = 24, block_size: int = 8):
+    if mode == "none":
+        return KVPool(CFG, n_blocks, block_size)
+    return QuantKVPool(CFG, n_blocks, block_size, mode=mode)
+
+
+def _check_invariants(pool, shadow: dict):
+    """Pool state must match the shadow refcount model exactly."""
+    # refcount array == shadow (all unmentioned ids are zero)
+    for b in range(pool.n_blocks):
+        want = shadow.get(b, 0)
+        assert pool.refcount[b] == want, \
+            f"block {b}: refcount {pool.refcount[b]} != shadow {want}"
+    # free list: exactly the zero-refcount non-scratch ids, no duplicates
+    free = list(pool._free)
+    assert len(free) == len(set(free)), f"duplicate ids in free list: {free}"
+    assert SCRATCH_BLOCK not in free, "scratch block leaked into free list"
+    want_free = {b for b in range(1, pool.n_blocks)
+                 if shadow.get(b, 0) == 0}
+    assert set(free) == want_free, \
+        f"free list {sorted(free)} != zero-refcount set {sorted(want_free)}"
+    # accounting properties derive from the same sets
+    assert pool.free_blocks == len(want_free)
+    assert pool.blocks_in_use == pool.capacity - len(want_free)
+    assert pool.peak_in_use >= pool.blocks_in_use
+
+
+def _random_op(rng, pool, rows: list, shadow: dict):
+    """Apply one random pool op, mirroring it into the shadow model.
+
+    ``rows`` holds live block-id lists (the stand-in for sequence block
+    tables); ``shadow`` maps block id -> expected refcount.
+    """
+    op = rng.choice(["alloc", "fork", "cow", "release", "reorder", "spec"])
+    if op == "alloc":
+        # admission: a fresh sequence takes 1..3 private blocks
+        n = int(rng.integers(1, 4))
+        if pool.free_blocks < n:
+            with pytest.raises(OutOfBlocks):
+                pool.alloc(pool.free_blocks + 1)
+            return
+        got = pool.alloc(n)
+        for b in got:
+            assert shadow.get(b, 0) == 0, f"alloc returned live block {b}"
+            shadow[b] = 1
+        rows.append(got)
+    elif op == "fork" and rows:
+        # Best-of-N fan-out: k extra owners per block, zero copies
+        src = rows[int(rng.integers(len(rows)))]
+        k = int(rng.integers(1, 3))
+        pool.retain(src, times=k)
+        for b in src:
+            shadow[b] += k
+        rows.extend([list(src)] * k)
+    elif op == "cow" and rows:
+        # first divergent write: shared blocks get private copies
+        r = int(rng.integers(len(rows)))
+        row = rows[r]
+        take = [b for b in row if rng.random() < 0.5] or row[:1]
+        if pool.free_blocks < len(take):
+            return
+        new = pool.cow(take)
+        for b in take:
+            shadow[b] -= 1
+            if shadow[b] == 0:
+                del shadow[b]
+        for b in new:
+            assert shadow.get(b, 0) == 0
+            shadow[b] = 1
+        sub = dict(zip(take, new))
+        rows[r] = [sub.get(b, b) for b in row]
+    elif op == "release" and rows:
+        # release_rows / a speculative draft lane rejected wholesale
+        r = int(rng.integers(len(rows)))
+        row = rows.pop(r)
+        pool.release(row)
+        for b in row:
+            shadow[b] -= 1
+            if shadow[b] == 0:
+                del shadow[b]
+    elif op == "reorder" and rows:
+        # beam survivor commit: drop one lane, duplicate another
+        drop = rows.pop(int(rng.integers(len(rows))))
+        pool.release(drop)
+        for b in drop:
+            shadow[b] -= 1
+            if shadow[b] == 0:
+                del shadow[b]
+        if rows:
+            keep = rows[int(rng.integers(len(rows)))]
+            pool.retain(keep, times=1)
+            for b in keep:
+                shadow[b] += 1
+            rows.append(list(keep))
+    elif op == "spec" and rows:
+        # speculative round: snapshot a lane (refcount bump), draft grows
+        # it by a private block, verify rejects -> suffix freed, snapshot
+        # released; net zero whatever the acceptance
+        src = rows[int(rng.integers(len(rows)))]
+        pool.retain(src, times=1)            # spec_snapshot
+        draft = list(src)
+        if pool.free_blocks >= 1:
+            got = pool.alloc(1)              # draft lane grows one block
+            draft += got
+            shadow[got[0]] = 1
+        for b in src:
+            shadow[b] += 1
+        pool.release(draft)                  # reject: snapshot + suffix
+        for b in draft:
+            shadow[b] -= 1
+            if shadow[b] == 0:
+                del shadow[b]
+
+
+def _drive(mode: str, seed: int, n_ops: int):
+    pool = _make_pool(mode)
+    rng = np.random.default_rng(seed)
+    rows, shadow = [], {}
+    for _ in range(n_ops):
+        _random_op(rng, pool, rows, shadow)
+        _check_invariants(pool, shadow)
+    # drain: releasing every live row must return the pool to empty
+    for row in rows:
+        pool.release(row)
+    assert pool.blocks_in_use == 0, \
+        f"{pool.blocks_in_use} blocks leaked after drain"
+    assert sorted(pool._free) == list(range(1, pool.n_blocks))
+
+
+@pytest.mark.parametrize("mode", ["none", "q8", "q4"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pool_random_op_stress(mode, seed):
+    """A few hundred random fork/cow/reorder/release/spec-reject ops keep
+    refcounts, free list and accounting exactly consistent on the fp and
+    both quantized pools, and the pool drains leak-free."""
+    _drive(mode, seed=seed, n_ops=120)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["none", "q8"])
+def test_pool_random_op_stress_long(mode):
+    """Long-sequence variant: thousands of ops across many seeds."""
+    for seed in range(8):
+        _drive(mode, seed=100 + seed, n_ops=1000)
+
+
+def test_pool_misuse_raises():
+    """The guard rails the random harness relies on: double release and
+    retain-of-free are errors, never silent corruption."""
+    pool = _make_pool("none")
+    got = pool.alloc(2)
+    pool.release(got)
+    with pytest.raises(ValueError, match="release of unallocated"):
+        pool.release(got[:1])
+    with pytest.raises(ValueError, match="retain of unallocated"):
+        pool.retain(got[:1])
+    with pytest.raises(OutOfBlocks):
+        pool.alloc(pool.capacity + 1)
+    assert pool.blocks_in_use == 0
+
+
+def _table_refcounts(eng, states) -> dict:
+    """Expected refcounts: one reference per (state row, table slot)."""
+    want = {}
+    for st in states:
+        table, n_blocks = jax.device_get((st.cache["table"],
+                                          st.cache["n_blocks"]))
+        for r in range(table.shape[0]):
+            for b in table[r, :n_blocks[r]]:
+                if int(b) != SCRATCH_BLOCK:
+                    want[int(b)] = want.get(int(b), 0) + 1
+    return want
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "q8"])
+def test_engine_row_ops_random_stress(trained_tiny, tiny_cfg, tok, kv_quant):
+    """The same invariant through the engine layer: after any random mix
+    of fork / reorder / release_rows / spec_snapshot+reject on real block
+    tables, every block's refcount equals the number of live table
+    references to it, and a full drain leaves the pool empty."""
+    from repro.serving.engine import DecodeEngine
+
+    eng = DecodeEngine(trained_tiny, tiny_cfg, max_len=32, eos_id=tok.eos_id,
+                       pad_id=tok.pad_id, paged=True, block_size=8,
+                       n_blocks=64, kv_quant=kv_quant)
+    prompt = jnp.asarray(tok.encode("Q:2+7=?A:"))
+    padded = jnp.full((2, 16), eng.pad_id, jnp.int32)
+    padded = padded.at[:, :prompt.shape[0]].set(jnp.tile(prompt, (2, 1)))
+    state = eng.prefill(padded, jnp.full((2,), prompt.shape[0], jnp.int32))
+    rng = np.random.default_rng(7)
+    for _ in range(60):
+        batch = int(state.cache_len.shape[0])
+        op = rng.choice(["fork", "reorder", "release", "spec"])
+        if op == "fork" and batch <= 8:
+            state = eng.fork(state, 2)
+        elif op == "reorder":
+            idx = jnp.asarray(rng.integers(0, batch, size=batch), jnp.int32)
+            state = eng.reorder(state, idx)
+        elif op == "release":
+            r = int(rng.integers(batch))
+            state = eng.release_rows(state, [r])
+            # released rows are re-pointed at scratch; drop them from the
+            # live set via reorder so the walk below stays simple
+            keep = [i for i in range(batch) if i != r]
+            if not keep:
+                break
+            state = eng.reorder(state, jnp.asarray(keep, jnp.int32))
+        elif op == "spec":
+            rows = [int(rng.integers(batch))]
+            snap = eng.spec_snapshot(state, rows)
+            snap = eng.release_rows(snap, rows)  # verify rejected the lane
+        want = _table_refcounts(eng, [state])
+        for b in range(eng.pool.n_blocks):
+            assert eng.pool.refcount[b] == want.get(b, 0), \
+                f"block {b}: refcount {eng.pool.refcount[b]} != " \
+                f"{want.get(b, 0)} table refs"
+    batch = int(state.cache_len.shape[0])
+    eng.release_rows(state, list(range(batch)))
+    assert eng.pool.blocks_in_use == 0

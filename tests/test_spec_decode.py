@@ -1,0 +1,192 @@
+"""Speculative decoding correctness: draft-then-verify on the paged engine.
+
+The feature's acceptance rule IS its test: greedy speculative decoding
+must be bit-identical to the plain greedy path — k drafted tokens are
+verified by one batched target forward, the longest agreeing prefix
+commits, and a rejected suffix is only ever a block free (PR-2 CoW
+semantics), so no numeric state survives a rejection.  The suite locks
+that down on fp and q8 pools, for self-drafting and a registry draft
+model, under mixed chat + Best-of-N traffic, under OutOfBlocks
+preemption mid-round, and for the ``Request.no_spec`` opt-out, plus the
+acceptance metrics / tracer / profiler threading.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.serving.engine import (ContinuousScheduler, DecodeEngine,
+                                  Request, SpecConfig)
+from repro.serving.sampler import SamplerConfig
+from repro.serving.telemetry import Tracer
+
+NO_STOP = (9999,)
+GREEDY = SamplerConfig(greedy=True)
+REQS = [("Q:2+7=?A:", 12), ("Q:1+1=?A:", 6), ("Q:9+9=?A:", 10),
+        ("Q:4+5=?A:", 8)]
+SELF_DRAFT = SpecConfig(k=4, self_draft=True)
+
+
+def _engine(params, cfg, tok, n_blocks=48, kv_quant="none"):
+    return DecodeEngine(params, cfg, max_len=64, eos_id=tok.eos_id,
+                        pad_id=tok.pad_id, paged=True, block_size=8,
+                        n_blocks=n_blocks, kv_quant=kv_quant)
+
+
+def _run(params, cfg, tok, spec, n_blocks=48, kv_quant="none", bon=False,
+         no_spec=False, tracer=None, profiler=None, stop_ids=NO_STOP):
+    eng = _engine(params, cfg, tok, n_blocks=n_blocks, kv_quant=kv_quant)
+    sched = ContinuousScheduler(eng, n_slots=3, prompt_len=16,
+                                stop_ids=stop_ids, spec=spec,
+                                tracer=tracer, profiler=profiler)
+    for i, (text, max_new) in enumerate(REQS):
+        sched.submit(Request(req_id=i, prompt=jnp.asarray(tok.encode(text)),
+                             max_new_tokens=max_new, no_spec=no_spec))
+    if bon:
+        sched.submit(Request(req_id=len(REQS),
+                             prompt=jnp.asarray(tok.encode(REQS[0][0])),
+                             max_new_tokens=8, n_samples=2))
+    res = sched.run(jax.random.key(0), GREEDY)
+    assert eng.pool.blocks_in_use == 0, "speculative run leaked blocks"
+    return res, sched.metrics.summary()
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "q8"])
+def test_self_draft_greedy_parity(trained_tiny, tiny_cfg, tok, kv_quant):
+    """Speculative greedy ≡ plain greedy, bitwise, on fp and q8 pools —
+    with the acceptance counters live (self-drafting the target model
+    greedily must accept every draft)."""
+    base, _ = _run(trained_tiny, tiny_cfg, tok, None, kv_quant=kv_quant)
+    spec, s = _run(trained_tiny, tiny_cfg, tok, SELF_DRAFT,
+                   kv_quant=kv_quant)
+    assert base == spec, f"{kv_quant}: speculative diverged from plain"
+    assert s["spec_rounds"] > 0 and s["draft_tokens"] > 0
+    assert s["spec_acceptance_rate"] > 0
+    assert s["accepted_tokens_per_step"] > 1
+    # stop-token traffic too: the committed-stop path must match
+    bs, _ = _run(trained_tiny, tiny_cfg, tok, None, kv_quant=kv_quant,
+                 stop_ids=(tok.eos_id,))
+    ss, _ = _run(trained_tiny, tiny_cfg, tok, SELF_DRAFT,
+                 kv_quant=kv_quant, stop_ids=(tok.eos_id,))
+    assert bs == ss
+
+
+def test_draft_model_greedy_parity(trained_tiny, tiny_cfg, tok):
+    """A registry draft model proposes; whatever it proposes, the target's
+    verify keeps outputs bit-identical to the plain path (the draft only
+    moves the accept rate, never the tokens)."""
+    spec = SpecConfig(k=3, draft_model="qwen2.5-1.5b")
+    base, _ = _run(trained_tiny, tiny_cfg, tok, None)
+    got, s = _run(trained_tiny, tiny_cfg, tok, spec)
+    assert base == got
+    assert s["spec_rounds"] > 0 and s["draft_tokens"] > 0
+    # an untrained random draft almost never agrees with the trained
+    # target, but every round still commits its verified first token
+    assert s["accepted_tokens_per_step"] >= 1
+
+
+def test_spec_with_mixed_bon_traffic(trained_tiny, tiny_cfg, tok):
+    """Chat + a Best-of-N fork group under speculation: the forked lanes
+    ride the same verify rounds and everything stays bit-identical."""
+    base, _ = _run(trained_tiny, tiny_cfg, tok, None, bon=True)
+    spec, s = _run(trained_tiny, tiny_cfg, tok, SELF_DRAFT, bon=True)
+    assert base == spec
+    assert len(spec[len(REQS)]) == 2
+    assert s["spec_acceptance_rate"] > 0
+
+
+def test_spec_parity_under_preemption(trained_tiny, tiny_cfg, tok):
+    """A starved pool preempts mid-workload; OutOfBlocks inside a
+    speculative round (snapshot, draft growth or the W-token verify plan)
+    must abort the round atomically — outputs match the plain starved run
+    and nothing leaks."""
+    base, sb = _run(trained_tiny, tiny_cfg, tok, None, n_blocks=8)
+    spec, ss = _run(trained_tiny, tiny_cfg, tok, SELF_DRAFT, n_blocks=8)
+    assert base == spec
+    assert sb["preemptions"] > 0 and ss["preemptions"] > 0
+    assert ss["spec_rounds"] > 0
+
+
+def test_no_spec_opt_out(trained_tiny, tiny_cfg, tok):
+    """``Request(no_spec=True)`` rides plain rounds: same outputs, zero
+    draft tokens recorded."""
+    base, _ = _run(trained_tiny, tiny_cfg, tok, None)
+    got, s = _run(trained_tiny, tiny_cfg, tok, SELF_DRAFT, no_spec=True)
+    assert base == got
+    assert s["draft_tokens"] == 0 and s["spec_rounds"] == 0
+
+
+def test_spec_non_greedy_sampling_falls_back(trained_tiny, tiny_cfg, tok):
+    """Speculative rounds only fire under greedy sampling (greedy
+    acceptance is exact there); a temperature run serves plain steps and
+    must match the spec-disabled run token for token."""
+    eng = _engine(trained_tiny, tiny_cfg, tok)
+
+    def run(spec):
+        e = _engine(trained_tiny, tiny_cfg, tok)
+        sched = ContinuousScheduler(e, n_slots=3, prompt_len=16,
+                                    stop_ids=NO_STOP, spec=spec)
+        for i, (text, max_new) in enumerate(REQS[:2]):
+            sched.submit(Request(req_id=i,
+                                 prompt=jnp.asarray(tok.encode(text)),
+                                 max_new_tokens=max_new))
+        res = sched.run(jax.random.key(0), SamplerConfig(temperature=0.8))
+        return res, sched.metrics.summary()
+
+    base, _ = run(None)
+    got, s = run(SELF_DRAFT)
+    assert base == got
+    assert s["spec_rounds"] == 0
+
+
+def test_spec_config_validation(trained_tiny, tiny_cfg, tok):
+    with pytest.raises(ValueError, match="must be >= 2"):
+        SpecConfig(k=1, self_draft=True)
+    with pytest.raises(ValueError, match="exactly one"):
+        SpecConfig(k=4)
+    with pytest.raises(ValueError, match="exactly one"):
+        SpecConfig(k=4, draft_model="qwen2.5-1.5b", self_draft=True)
+    # scheduler-side: speculation needs the paged engine
+    dense = DecodeEngine(trained_tiny, tiny_cfg, max_len=64,
+                         eos_id=tok.eos_id, pad_id=tok.pad_id)
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousScheduler(dense, n_slots=2, spec=SELF_DRAFT)
+    # engine-side: spec_verify is a paged-only primitive
+    st = dense.prefill(jnp.ones((1, 8), jnp.int32))
+    with pytest.raises(ValueError, match="paged"):
+        dense.spec_verify(st, jnp.ones((1, 2), jnp.int32),
+                          jnp.ones((1,), jnp.int32))
+
+
+def test_spec_telemetry_and_profiler_threading(trained_tiny, tiny_cfg, tok):
+    """Verify rounds land in the tracer (a ``spec_verify`` span per round,
+    an accepted-token gauge track) and in the profiler's phase
+    attribution."""
+    from repro.serving.profiling import KernelProfiler
+
+    tracer = Tracer()
+    prof = KernelProfiler(sample_rate=1.0, canary_rate=0.0)
+    try:
+        _, s = _run(trained_tiny, tiny_cfg, tok, SELF_DRAFT, tracer=tracer,
+                    profiler=prof)
+    finally:
+        prof.uninstall()
+    spans = [sp for sp in tracer.spans if sp.name == "spec_verify"]
+    assert len(spans) == s["spec_rounds"] > 0
+    gauges = [g for g in tracer.gauges if g.name == "spec_accepted_tokens"]
+    assert len(gauges) == s["spec_rounds"]
+    assert sum(g.value for g in gauges) > 0
+    phases = prof.report()["phases"]
+    assert "spec_verify" in phases and phases["spec_verify"]["calls"] > 0
+
+
+def test_spec_metrics_summary_keys(trained_tiny, tiny_cfg, tok):
+    """The summary threads the three headline counters with sane values:
+    acceptance rate in (0, 1], accepted/step in (1, k]."""
+    _, s = _run(trained_tiny, tiny_cfg, tok, SELF_DRAFT)
+    assert 0 < s["spec_acceptance_rate"] <= 1
+    assert 1 < s["accepted_tokens_per_step"] <= SELF_DRAFT.k
+    assert s["draft_tokens"] >= s["spec_rounds"]
+    # spec-disabled runs report zeros, not missing keys
+    _, s0 = _run(trained_tiny, tiny_cfg, tok, None)
+    assert s0["spec_rounds"] == 0 and s0["spec_acceptance_rate"] == 0.0
+    assert s0["accepted_tokens_per_step"] == 0.0
